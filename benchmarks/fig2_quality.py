@@ -1,0 +1,26 @@
+"""Paper Fig. 2: per-cycle median pLDDT / pTM / inter-chain pAE for the four
+PDZ structures, CONT-V vs IM-RP."""
+
+from benchmarks._impress import cached_run
+
+
+def run():
+    out = {}
+    for adaptive, name in ((False, "CONT-V"), (True, "IM-RP")):
+        rep = cached_run(adaptive, 4, 4, 6)
+        out[name] = {int(c): {k: round(v, 4) for k, v in m.items()}
+                     for c, m in rep["cycles"].items()}
+    return out
+
+
+def main(emit):
+    data = run()
+    for name, cycles in data.items():
+        for c, m in sorted(cycles.items()):
+            emit(f"fig2.{name.lower()}_cycle{c}_plddt_median", 0,
+                 m["plddt_median"])
+            emit(f"fig2.{name.lower()}_cycle{c}_ptm_median", 0,
+                 m["ptm_median"])
+            emit(f"fig2.{name.lower()}_cycle{c}_pae_median", 0,
+                 m["pae_median"])
+    return data

@@ -1,0 +1,38 @@
+"""Paper Figs. 4/5: device utilization timelines and the Bootstrap /
+Exec-setup / Running time decomposition for both implementations."""
+
+import numpy as np
+
+from benchmarks._impress import cached_run
+
+
+def run():
+    out = {}
+    for adaptive, name in ((False, "CONT-V"), (True, "IM-RP")):
+        rep = cached_run(adaptive, 4, 4, 6)
+        ts, busy = rep["timeline"]
+        ex = rep["executor"]
+        out[name] = {
+            "utilization_pct": round(100 * rep["utilization"], 1),
+            "peak_busy_devices": int(max(busy)) if busy else 0,
+            "mean_busy_devices": round(float(np.mean(busy)), 2) if busy else 0,
+            "bootstrap_s": round(rep["bootstrap_s"], 3),
+            "exec_setup_s": round(rep["exec_setup_s"], 3),
+            "running_s": round(ex["mean_running_s"] * ex["n_done"], 3),
+            "makespan_s": round(rep["makespan_s"], 3),
+        }
+    return out
+
+
+def main(emit):
+    data = run()
+    for name, m in data.items():
+        n = name.lower().replace("-", "")
+        emit(f"fig45.{n}_util_pct", m["makespan_s"] * 1e6,
+             m["utilization_pct"])
+        emit(f"fig45.{n}_bootstrap_s", m["bootstrap_s"] * 1e6,
+             m["bootstrap_s"])
+        emit(f"fig45.{n}_exec_setup_s", m["exec_setup_s"] * 1e6,
+             m["exec_setup_s"])
+        emit(f"fig45.{n}_running_s", m["running_s"] * 1e6, m["running_s"])
+    return data

@@ -1,0 +1,184 @@
+"""§Roofline table generator.
+
+Reads the dry-run JSONs (results/dryrun/*.json), and for every (arch × shape
+× mesh) cell reports the three roofline terms, the dominant bottleneck, the
+MODEL_FLOPS/HLO_FLOPS ratio, and — where the measured XLA-path traffic is
+attributable to a sequence-mixer hot-spot (tagged `flashattn`/`sdpattn`/
+`wkvscan`/`rgscan` scopes) — the *kernelized* memory term obtained by
+replacing that traffic with the Pallas kernel's HBM traffic model:
+
+  flash fwd:  q + o read/written once, k/v streamed once per q block
+              (block_q=1024): (q+o) + ceil(S/1024)·(k+v); bwd ≈ 2× fwd.
+  wkv6/rglru: the streams (r,k,v,w,y / a,b,h) touch HBM exactly once per
+              pass; the (C,C,K) decay tensors live in VMEM only.
+
+Writes results/roofline.csv + a markdown table for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.distributed.hlo_analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+BQ = 1024  # flash q-block for the kernel traffic model
+
+
+def _attn_layers(cfg):
+    full = sum(sum(1 for k in kinds if k in ("attn", "moe", "dec_attn"))
+               * reps for kinds, reps in cfg.segments)
+    local = sum(sum(1 for k in kinds if k in ("attn_local", "attn_local_moe"))
+                * reps for kinds, reps in cfg.segments)
+    enc = sum(sum(1 for k in kinds if k == "enc_attn") * reps
+              for kinds, reps in cfg.encoder_segments)
+    return full, local, enc
+
+
+def _mixer_layers(cfg):
+    wkv = sum(sum(1 for k in kinds if k == "rwkv") * reps
+              for kinds, reps in cfg.segments)
+    rg = sum(sum(1 for k in kinds if k == "rglru") * reps
+             for kinds, reps in cfg.segments)
+    return wkv, rg
+
+
+def kernel_traffic(cfg, shape, chips):
+    """Analytic per-device HBM bytes of the Pallas kernels for this cell."""
+    sc = SHAPES_BY_NAME[shape]
+    B, S = sc.global_batch, sc.seq_len
+    passes = 3.0 if sc.kind == "train" else 1.0  # fwd (+~2x for bwd)
+    if sc.kind == "decode":
+        return 0.0  # decode attention reads the cache once already
+    full, local, enc = _attn_layers(cfg)
+    bt = 2  # bf16
+    q = B * S * cfg.n_heads * cfg.head_dim * bt
+    kv = 2 * B * S * cfg.n_kv_heads * cfg.head_dim * bt
+    nq = max(1, S // BQ)
+    # local attention only revisits k/v within the window
+    nq_local = max(1, min(nq, (cfg.attn_window // BQ) + 1))
+    attn = full * (2 * q + nq * kv) + local * (2 * q + nq_local * kv)
+    if enc:
+        F = cfg.frontend_seq
+        qe = B * F * cfg.n_heads * cfg.head_dim * bt
+        kve = 2 * B * F * cfg.n_kv_heads * cfg.head_dim * bt
+        attn += enc * (2 * qe + max(1, F // BQ) * kve)
+    wkv, rg = _mixer_layers(cfg)
+    mixer = wkv * 5 * B * S * cfg.d_model * 4 \
+        + rg * 3 * B * S * cfg.lru_width * 4
+    return passes * (attn + mixer) / chips
+
+
+def load_cells(out_dir="results/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        name = os.path.basename(f)
+        if "_ovr" in name or name.endswith("_xla.json"):
+            continue  # perf-iteration variants, not baselines
+        r = json.load(open(f))
+        cells.append(r)
+    return cells
+
+
+def build_table(out_dir="results/dryrun"):
+    rows = []
+    for r in load_cells(out_dir):
+        base = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"]}
+        if "error" in r:
+            rows.append(dict(base, status="ERROR"))
+            continue
+        if not r.get("applicable"):
+            rows.append(dict(base, status="SKIP",
+                             note=r.get("skip_reason", "")))
+            continue
+        ro = r["roofline"]
+        cfg = get_config(r["arch"])
+        chips = r["chips"]
+        tagged = (r.get("attn_tagged", {}).get("bytes", 0.0)
+                  + r.get("mixer_tagged", {}).get("bytes", 0.0))
+        ktraffic = kernel_traffic(cfg, r["shape"], chips)
+        kbytes = max(ro["hbm_bytes_per_device"] - tagged, 0.0) + ktraffic
+        t_mem_k = kbytes / HBM_BW
+        t_bound = max(ro["t_compute_s"], ro["t_memory_s"],
+                      ro["t_collective_s"])
+        t_bound_k = max(ro["t_compute_s"], t_mem_k, ro["t_collective_s"])
+        rf = ro["roofline_fraction"]
+        rf_k = (ro["model_flops"] / chips / PEAK_FLOPS) / t_bound_k \
+            if t_bound_k else 0.0
+        ma = r.get("memory_analysis", {})
+        mem_gb = ((ma.get("temp_size_bytes") or 0)
+                  + (ma.get("argument_size_bytes") or 0)) / 1e9
+        rows.append(dict(
+            base, status="OK", chips=chips,
+            params=r["params"], active_params=r["active_params"],
+            t_compute_s=ro["t_compute_s"], t_memory_s=ro["t_memory_s"],
+            t_collective_s=ro["t_collective_s"],
+            t_memory_kernelized_s=t_mem_k,
+            bottleneck=ro["bottleneck"],
+            bottleneck_kernelized=(
+                "compute" if t_bound_k == ro["t_compute_s"] else
+                "memory" if t_bound_k == t_mem_k else "collective"),
+            model_flops=ro["model_flops"],
+            model_flops_ratio=ro["model_flops_ratio"],
+            roofline_fraction=rf, roofline_fraction_kernelized=rf_k,
+            mem_gb_per_chip=mem_gb,
+            collectives=ro.get("collectives", {}),
+        ))
+    return rows
+
+
+def to_csv(rows, path="results/roofline.csv"):
+    import csv
+    keys = ["arch", "shape", "mesh", "status", "chips", "bottleneck",
+            "bottleneck_kernelized", "t_compute_s", "t_memory_s",
+            "t_collective_s", "t_memory_kernelized_s", "model_flops_ratio",
+            "roofline_fraction", "roofline_fraction_kernelized",
+            "mem_gb_per_chip"]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def to_markdown(rows):
+    out = ["| arch | shape | mesh | bottleneck | t_comp | t_mem | t_coll | "
+           "t_mem(kern) | mfr | RF | RF(kern) | GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} {r.get('note', '')[:40]} | | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['bottleneck']}"
+            f"→{r['bottleneck_kernelized']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['t_memory_kernelized_s']:.3f} | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['roofline_fraction_kernelized']:.3f} | "
+            f"{r['mem_gb_per_chip']:.1f} |")
+    return "\n".join(out)
+
+
+def main(emit):
+    rows = build_table()
+    to_csv(rows)
+    ok = [r for r in rows if r["status"] == "OK"]
+    for r in ok:
+        if r["mesh"] == "single":
+            emit(f"roofline.{r['arch']}.{r['shape']}.rf_kernelized", 0,
+                 round(r["roofline_fraction_kernelized"], 4))
+    if ok:
+        best = max(ok, key=lambda r: r["roofline_fraction_kernelized"])
+        emit("roofline.best_rf_kernelized", 0,
+             round(best["roofline_fraction_kernelized"], 4))
+    emit("roofline.n_cells_ok", 0, len(ok))
+    emit("roofline.n_cells_total", 0, len(rows))
+    return rows

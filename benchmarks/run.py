@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+table. Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig2,...]
+"""
+
+import argparse
+import time
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "roofline" in only:
+        from benchmarks import roofline
+        roofline.main(emit)
+    if "table1" in only:
+        from benchmarks import table1_adaptivity
+        table1_adaptivity.main(emit)
+    if "fig2" in only:
+        from benchmarks import fig2_quality
+        fig2_quality.main(emit)
+    if "fig45" in only:
+        from benchmarks import fig45_utilization
+        fig45_utilization.main(emit)
+    if "fig3" in only:
+        from benchmarks import fig3_expansion
+        fig3_expansion.main(emit)
+    emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
+         round(time.time() - t0, 1))
+
+
+if __name__ == "__main__":
+    main()

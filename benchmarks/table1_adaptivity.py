@@ -1,0 +1,37 @@
+"""Paper Table I: CONT-V vs IM-RP — pipelines, sub-pipelines, trajectories,
+CPU/GPU (device) utilization, execution time, and net quality deltas."""
+
+from benchmarks._impress import cached_run, quality_delta
+
+
+def run():
+    rows = []
+    for adaptive, name in ((False, "CONT-V"), (True, "IM-RP")):
+        rep = cached_run(adaptive, 4, 4, 6)
+        dq = quality_delta(rep)
+        rows.append({
+            "approach": name,
+            "n_pipelines": rep["n_pipelines"],
+            "n_sub_pipelines": rep["n_sub_pipelines"],
+            "structures_per_pl": 1,
+            "trajectories": rep["trajectories"],
+            "device_util_pct": round(100 * rep["utilization"], 1),
+            "time_s": round(rep["makespan_s"], 2),
+            "ptm_net": round(dq.get("ptm_net", 0), 4),
+            "plddt_net": round(dq.get("plddt_net", 0), 3),
+            "pae_net": round(dq.get("pae_net", 0), 3),
+        })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    c, a = rows
+    emit("table1.contv_trajectories", c["time_s"] * 1e6, c["trajectories"])
+    emit("table1.imrp_trajectories", a["time_s"] * 1e6, a["trajectories"])
+    emit("table1.contv_util_pct", c["time_s"] * 1e6, c["device_util_pct"])
+    emit("table1.imrp_util_pct", a["time_s"] * 1e6, a["device_util_pct"])
+    emit("table1.imrp_sub_pipelines", a["time_s"] * 1e6, a["n_sub_pipelines"])
+    emit("table1.imrp_plddt_net_delta", a["time_s"] * 1e6, a["plddt_net"])
+    emit("table1.contv_plddt_net_delta", c["time_s"] * 1e6, c["plddt_net"])
+    return rows

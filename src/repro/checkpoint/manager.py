@@ -1,0 +1,100 @@
+"""Checkpoint manager: periodic async snapshots + restart recovery.
+
+Writes happen on a background thread (device->host transfer included) so the
+train/design loop never blocks — the checkpoint/restart half of the paper's
+fault-tolerance story. Keeps the newest ``keep`` checkpoints, tracks a JSON
+"latest" pointer that is only advanced after a fully-successful write, and
+can persist arbitrary coordinator state (the IMPRESS protocol's trajectory
+pool) alongside the model state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep=3, async_write=True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._lock = threading.Lock()
+        self._pending: list = []
+        os.makedirs(directory, exist_ok=True)
+
+    def _base(self, step):
+        return os.path.join(self.dir, f"ckpt_{step:08d}")
+
+    # -- write ---------------------------------------------------------
+
+    def save(self, step, state, *, extra=None, block=False):
+        """state: pytree of jax arrays. extra: JSON-serializable dict
+        (coordinator / protocol state)."""
+        state = jax.tree.map(jax.device_get, state)  # snapshot now
+
+        def write():
+            base = self._base(step)
+            save_pytree(state, base, step=step)
+            if extra is not None:
+                with open(base + ".extra.json", "w") as f:
+                    json.dump(extra, f)
+            with self._lock:
+                with open(os.path.join(self.dir, "latest.json"), "w") as f:
+                    json.dump({"step": step, "time": time.time()}, f)
+                self._gc()
+
+        if self.async_write and not block:
+            t = threading.Thread(target=write, daemon=True)
+            t.start()
+            self._pending.append(t)
+        else:
+            write()
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            for suffix in (".npz", ".manifest", ".extra.json"):
+                try:
+                    os.remove(self._base(s) + suffix)
+                except FileNotFoundError:
+                    pass
+
+    # -- read ----------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append(int(f[len("ckpt_"):-len(".npz")]))
+        return sorted(out)
+
+    def latest_step(self):
+        p = os.path.join(self.dir, "latest.json")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f)["step"]
+
+    def restore(self, template, step=None, *, shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        base = self._base(step)
+        state = load_pytree(template, base, shardings=shardings)
+        extra = None
+        if os.path.exists(base + ".extra.json"):
+            with open(base + ".extra.json") as f:
+                extra = json.load(f)
+        return state, extra, step

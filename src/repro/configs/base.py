@@ -1,0 +1,206 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The layer stack
+is described by *segments*: ``(kinds, repeats)`` pairs, where ``kinds`` is a
+tuple of layer-kind strings making up one repeating block. Each segment is
+executed with ``jax.lax.scan`` over stacked per-layer parameters, which keeps
+HLO size (and therefore compile time) independent of depth.
+
+Layer kinds:
+  attn        causal self-attention + MLP
+  attn_local  local-window causal self-attention + MLP
+  moe         causal self-attention + mixture-of-experts FFN
+  attn_local_moe  local-window attention + MoE FFN (llama4-style iRoPE interleave)
+  rglru       Griffin recurrent block (conv1d + RG-LRU) + MLP
+  rwkv        RWKV-6 time-mix + RWKV channel-mix
+  enc_attn    bidirectional self-attention + MLP (encoder)
+  dec_attn    causal self-attention + cross-attention + MLP (enc-dec decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+Segment = Tuple[Tuple[str, ...], int]  # (block kinds, repeats)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    segments: Tuple[Segment, ...] = ()
+
+    # --- attention ---
+    attn_window: int = 0             # local-attention window (0 = n/a)
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0       # fraction of head_dim that is rotated
+    rope_style: str = "half"         # "half" (llama) | "interleaved" (chatglm)
+    attn_logit_softcap: float = 0.0
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q/k
+
+    # --- mlp ---
+    mlp_type: str = "swiglu"         # swiglu | geglu | relu2 | gelu
+
+    # --- moe ---
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_shared_expert: bool = False  # llama4: shared expert alongside routed
+    moe_impl: str = "capacity"       # capacity (dropping, EP-sharded) | dense (exact)
+    moe_parallelism: str = "ep"      # ep (experts->model axis, token a2a) |
+                                     # fsdp (experts replicated at use,
+                                     # FSDP-sharded storage; wins when
+                                     # expert weights/layer << a2a volume)
+
+    # --- ssm / recurrent ---
+    lru_width: int = 0               # RG-LRU recurrence width (0 -> d_model)
+    conv_width: int = 4              # Griffin temporal conv width
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 32         # WKV chunk length (XLA path)
+
+    # --- encoder / frontend (audio & vlm stubs) ---
+    encoder_segments: Tuple[Segment, ...] = ()
+    frontend: str = ""               # "" | "audio_frames" | "vision_patches"
+    frontend_seq: int = 0            # frames / patches supplied by the stub
+    # vlm: patch embeddings are prepended to token embeddings; audio: enc-dec
+
+    # --- norm / embedding ---
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    emb_scale: bool = False          # multiply token emb by sqrt(d_model)
+
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # --- distribution policy ---
+    fsdp: bool = False               # shard params over the data axis too
+    sequence_parallel: bool = False  # shard residual seq over model axis
+    remat: str = "none"              # none | full | dots
+    scan_layers: bool = True
+    train_microbatches: int = 1      # gradient-accumulation scan steps
+    ce_chunks: int = 1               # sequence-chunked cross-entropy (big V)
+
+    # --- attention implementation ---
+    attn_impl: str = "xla"           # xla | pallas | pallas_interpret
+    ssm_impl: str = "xla"            # xla | pallas | pallas_interpret
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if not self.segments:
+            object.__setattr__(self, "segments", ((("attn",), self.n_layers),))
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+        total = sum(len(k) * r for k, r in self.segments)
+        if self.encoder_segments:
+            total_enc = sum(len(k) * r for k, r in self.encoder_segments)
+        assert total == self.n_layers, (
+            f"{self.name}: segments describe {total} layers, expected {self.n_layers}")
+
+    # ---- derived ----
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 128 (TPU lane width, and makes
+        the vocab axis shardable over 16-way model parallelism)."""
+        return 128 * math.ceil(self.vocab_size / 128)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + per-layer)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        per_kind = {}
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        mlp_mult = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        mlp = mlp_mult * d * self.d_ff
+        moe = self.moe_experts * (3 * d * self.moe_d_ff) + d * self.moe_experts
+        if self.moe_shared_expert:
+            moe += 3 * d * self.d_ff
+        per_kind["attn"] = attn + mlp
+        per_kind["attn_local"] = attn + mlp
+        per_kind["enc_attn"] = attn + mlp
+        per_kind["dec_attn"] = 2 * attn + mlp
+        per_kind["moe"] = attn + moe
+        per_kind["attn_local_moe"] = attn + moe
+        per_kind["rglru"] = (2 * d * self.lru_width + self.lru_width * d
+                             + self.conv_width * self.lru_width
+                             + 2 * self.lru_width + mlp)
+        rk = self.rwkv_head_dim
+        nh = d // rk
+        per_kind["rwkv"] = (5 * d * d + d * d        # r,k,v,g,o
+                            + 6 * 32 * d * 2         # ddlerp loras
+                            + d * 64 * 2 + 2 * d     # decay lora, u
+                            + 2 * d * self.d_ff + d * d)  # channel mix
+        total = emb
+        for kinds, reps in self.segments:
+            for k in kinds:
+                total += per_kind[k] * reps
+        for kinds, reps in self.encoder_segments:
+            for k in kinds:
+                total += per_kind[k] * reps
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts instead of all)."""
+        if self.moe_experts == 0:
+            return self.param_count()
+        full_moe = self.moe_experts * 3 * self.d_model * self.moe_d_ff
+        active_moe = self.moe_top_k * 3 * self.d_model * self.moe_d_ff
+        n_moe_layers = sum(
+            sum(1 for k in kinds if k in ("moe", "attn_local_moe")) * reps
+            for kinds, reps in self.segments)
+        return self.param_count() - n_moe_layers * (full_moe - active_moe)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, and why not if skipped.
+
+    ``long_500k`` needs sub-quadratic sequence mixing: it runs only for
+    ssm/hybrid families (constant-size or windowed state); pure full-attention
+    archs skip it (documented in DESIGN.md §Arch-applicability).
+    """
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "long_500k skipped: full-attention arch (quadratic prefill, unbounded KV)"
+    return True, ""

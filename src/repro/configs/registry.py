@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` lookup for all assigned archs."""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "whisper-small": "whisper_small",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "rwkv6-7b": "rwkv6_7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "smollm-360m": "smollm_360m",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3-8b": "llama3_8b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+    "llava-next-34b": "llava_next_34b",
+    # paper payload models
+    "progen-s": "protein_impress",
+    "foldscore-s": "protein_impress",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k not in ("progen-s", "foldscore-s"))
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str):
+    mod = _module(arch_id)
+    if arch_id == "progen-s":
+        return mod.progen_config()
+    if arch_id == "foldscore-s":
+        return mod.foldscore_config()
+    return mod.config()
+
+
+def get_reduced(arch_id: str):
+    mod = _module(arch_id)
+    if arch_id == "progen-s":
+        cfg = mod.progen_reduced()
+    elif arch_id == "foldscore-s":
+        cfg = mod.foldscore_reduced()
+    else:
+        cfg = mod.reduced()
+    # large-scale memory knobs are irrelevant (and shape-hostile) at
+    # smoke-test scale
+    return cfg.replace(ce_chunks=1, train_microbatches=1,
+                       sequence_parallel=False, remat="none")

@@ -1,0 +1,12 @@
+# The paper's primary contribution: the IMPRESS adaptive protein-design
+# protocol (protocol.py), the pipelines coordinator (coordinator.py), the
+# RP-style task/pipeline model (pipeline.py) and the device payload
+# functions (payload.py). The execution runtime lives in repro.runtime.
+from repro.core.coordinator import Coordinator
+from repro.core.payload import ProteinPayload
+from repro.core.pipeline import Pipeline, ResourceRequest, Task, TaskState
+from repro.core.protocol import ImpressProtocol, ProtocolConfig, fitness
+
+__all__ = ["Coordinator", "ProteinPayload", "Pipeline", "ResourceRequest",
+           "Task", "TaskState", "ImpressProtocol", "ProtocolConfig",
+           "fitness"]

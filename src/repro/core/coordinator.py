@@ -1,0 +1,215 @@
+"""The IMPRESS pipelines coordinator (paper Fig. 1, boxes 1/3/6/7).
+
+Maintains the global perspective over every pipeline's results, drains the
+completion channel, applies the protocol's adaptive decisions, and submits
+new tasks / sub-pipelines through the submission channel — concurrently for
+IM-RP, strictly sequentially for the CONT-V control (``max_inflight=1``).
+
+Sub-pipelines proposed by the protocol are submitted only when idle
+resources exist ("offloading the newly created pipelines ... to the idle
+resources when possible"), otherwise they are parked and retried on the next
+completion.
+
+The coordinator state (trajectory pool, per-pipeline history) is
+JSON-serializable via ``state_dict`` for checkpoint/restart.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import Pipeline, Task, TaskState
+from repro.core.protocol import ImpressProtocol, ProtocolConfig
+from repro.runtime.executor import AsyncExecutor
+
+
+class Coordinator:
+    def __init__(self, executor: AsyncExecutor, protocol: ImpressProtocol,
+                 *, max_inflight: Optional[int] = None):
+        self.executor = executor
+        self.protocol = protocol
+        self.max_inflight = max_inflight     # None = unbounded (IM-RP)
+        self.pipelines: Dict[int, Pipeline] = {}
+        self._task_pipeline: Dict[int, int] = {}
+        self._inflight = 0
+        self._ready: List[Task] = []         # submission channel buffer
+        self._parked_spawns: List[dict] = []
+        self.events: List[dict] = []
+        self._done_task_uids: set = set()
+
+    # -- submission channel ------------------------------------------------
+
+    def add_pipeline(self, pl: Pipeline, first_task: Optional[Task] = None):
+        self.pipelines[pl.uid] = pl
+        task = first_task or self.protocol.first_task(pl)
+        self._enqueue(task)
+
+    def _enqueue(self, task: Task):
+        self._ready.append(task)
+        self._pump()
+
+    def _pump(self):
+        while self._ready and (self.max_inflight is None
+                               or self._inflight < self.max_inflight):
+            task = self._ready.pop(0)
+            self._task_pipeline[task.uid] = task.pipeline_id
+            self._inflight += 1
+            self.executor.submit(task)
+
+    # -- sub-pipelines -------------------------------------------------------
+
+    def _try_spawn(self, spawn: dict):
+        if spawn is None:
+            return
+        self._parked_spawns.append(spawn)
+        self._drain_parked()
+
+    def _drain_parked(self):
+        still = []
+        for spawn in self._parked_spawns:
+            cfgp = self.protocol.cfg
+            if self.protocol.n_sub_spawned >= cfgp.max_sub_pipelines:
+                continue  # cap reached while parked: drop the proposal
+            idle = self.executor.allocator.n_free > 0
+            if idle:
+                sub = self.protocol.new_pipeline(
+                    spawn["name"], spawn["backbone"], spawn["target"],
+                    spawn["receptor_len"],
+                    peptide_tokens=spawn.get("peptide_tokens"),
+                    parent=spawn["parent"],
+                    seed_candidate=spawn["seed_candidate"])
+                sub.cycle = spawn.get("cycle", 0)
+                if spawn.get("prev_fitness") is not None:
+                    sub.meta["prev_fitness"] = spawn["prev_fitness"]
+                self.protocol.register_sub_spawn()
+                self.events.append({"t": time.monotonic(), "event": "spawn",
+                                    "pipeline": sub.name})
+                self.add_pipeline(sub)
+            else:
+                still.append(spawn)
+        self._parked_spawns = still
+
+    # -- completion channel ---------------------------------------------------
+
+    def _handle(self, task: Task):
+        pl = self.pipelines.get(self._task_pipeline.get(task.uid, -1))
+        if task.speculative_of is not None:
+            # speculative duplicate: only count if the original hasn't won
+            if task.speculative_of in self._done_task_uids \
+                    or task.state != TaskState.DONE:
+                return
+            orig_pl = self.pipelines.get(task.pipeline_id)
+            pl = orig_pl if orig_pl is not None else pl
+        if task.state in (TaskState.FAILED, TaskState.CANCELED):
+            self.events.append({"t": time.monotonic(),
+                                "event": task.state.value,
+                                "task": task.kind, "error": task.error})
+            if pl is not None and task.state == TaskState.FAILED:
+                pl.active = False
+            return
+        self._done_task_uids.add(task.uid)
+        if pl is None or not pl.active:
+            return
+        if task.kind == "generate":
+            for t in self.protocol.on_generate_done(pl, task.result):
+                t.pipeline_id = pl.uid
+                self._enqueue(t)
+        elif task.kind == "predict":
+            out = self.protocol.on_predict_done(pl, task.result)
+            self.events.append({"t": time.monotonic(), "event": out["event"],
+                                "pipeline": pl.name, "cycle": pl.cycle})
+            for t in out["tasks"]:
+                t.pipeline_id = pl.uid
+                self._enqueue(t)
+            self._try_spawn(out["spawn"])
+
+    # -- main loop --------------------------------------------------------------
+
+    def run(self, timeout: float = 600.0) -> dict:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            active = any(p.active for p in self.pipelines.values())
+            if not active and self._inflight == 0 and not self._ready:
+                break
+            task = self.executor.drain(timeout=0.05)
+            if task is None:
+                if self._inflight == 0 and self._ready:
+                    self._pump()
+                continue
+            if task.speculative_of is None:
+                self._inflight -= 1
+            self._handle(task)
+            self._pump()
+            self._drain_parked()
+        return self.report(makespan=time.monotonic() - t0)
+
+    # -- reporting ------------------------------------------------------------
+
+    def report(self, makespan: float) -> dict:
+        pls = list(self.pipelines.values())
+        top = [p for p in pls if not p.is_sub_pipeline]
+        subs = [p for p in pls if p.is_sub_pipeline]
+        trajectories = sum(p.meta["trajectories"] for p in pls)
+        per_cycle: Dict[int, List[dict]] = {}
+        for p in pls:
+            for h in p.history:
+                per_cycle.setdefault(h["cycle"], []).append(h)
+        cycles = {}
+        for c, hs in sorted(per_cycle.items()):
+            cycles[c] = {
+                "fitness_median": float(np.median([h["fitness"] for h in hs])),
+                "plddt_median": float(np.median([h["plddt"] for h in hs])),
+                "ptm_median": float(np.median([h["ptm"] for h in hs])),
+                "pae_median": float(np.median([h["pae"] for h in hs])),
+                "plddt_std": float(np.std([h["plddt"] for h in hs])),
+                "ptm_std": float(np.std([h["ptm"] for h in hs])),
+                "pae_std": float(np.std([h["pae"] for h in hs])),
+                "n": len(hs),
+            }
+        return {
+            "n_pipelines": len(top),
+            "n_sub_pipelines": len(subs),
+            "trajectories": trajectories,
+            "makespan_s": makespan,
+            "utilization": self.executor.allocator.utilization(),
+            "executor": self.executor.stats(),
+            "cycles": cycles,
+            "events": self.events,
+        }
+
+    # -- checkpoint/restart -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "pipelines": [{
+                "name": p.name, "uid": p.uid, "parent": p.parent,
+                "cycle": p.cycle, "active": p.active,
+                "history": p.history,
+                "meta": {k: (v.tolist() if isinstance(v, np.ndarray) else
+                             ([x.tolist() for x in v] if isinstance(v, tuple)
+                              else v))
+                         for k, v in p.meta.items()},
+            } for p in self.pipelines.values()],
+            "n_sub_spawned": self.protocol.n_sub_spawned,
+        }
+
+    def load_state_dict(self, state: dict):
+        self.protocol.n_sub_spawned = state["n_sub_spawned"]
+        for rec in state["pipelines"]:
+            meta = dict(rec["meta"])
+            meta["backbone"] = np.asarray(meta["backbone"], np.float32)
+            meta["target"] = np.asarray(meta["target"], np.float32)
+            if meta.get("candidates"):
+                seqs, lls = meta["candidates"]
+                meta["candidates"] = (np.asarray(seqs, np.int32),
+                                      np.asarray(lls, np.float32))
+            pl = Pipeline(name=rec["name"], parent=rec["parent"], meta=meta)
+            pl.cycle = rec["cycle"]
+            pl.active = rec["active"]
+            pl.history = rec["history"]
+            self.pipelines[pl.uid] = pl
+            if pl.active:
+                self._enqueue(self.protocol.first_task(pl))

@@ -1,0 +1,86 @@
+"""Pipeline / task state machines (the RP-style task model).
+
+RADICAL-Pilot exposes *tasks* as the first-class unit; IMPRESS builds a
+Pipeline abstraction on top (the paper implements a Pipeline class for the
+same reason — RP has no workflow notion). States and their timestamps mirror
+RP's state model so utilization accounting is directly comparable to the
+paper's Fig. 4/5 (Bootstrap / Exec setup / Running decomposition).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+class TaskState(enum.Enum):
+    NEW = "NEW"
+    QUEUED = "QUEUED"            # waiting for resources
+    SCHEDULED = "SCHEDULED"      # resources assigned, awaiting worker
+    EXEC_SETUP = "EXEC_SETUP"    # compilation / payload staging
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+TERMINAL = (TaskState.DONE, TaskState.FAILED, TaskState.CANCELED)
+
+_uid = itertools.count()
+
+
+@dataclass
+class ResourceRequest:
+    n_devices: int = 1
+    preferred_shape: Optional[tuple] = None  # e.g. (2, 2) sub-mesh
+
+
+@dataclass
+class Task:
+    kind: str                      # registered payload function name
+    payload: Dict[str, Any]
+    resources: ResourceRequest = field(default_factory=ResourceRequest)
+    priority: int = 0              # lower = more urgent
+    pipeline_id: Optional[int] = None
+    uid: int = field(default_factory=lambda: next(_uid))
+    state: TaskState = TaskState.NEW
+    timestamps: Dict[str, float] = field(default_factory=dict)
+    result: Any = None
+    error: Optional[str] = None
+    retries: int = 0
+    speculative_of: Optional[int] = None  # straggler-mitigation duplicate
+    canceled: bool = False
+
+    def set_state(self, state: TaskState):
+        self.state = state
+        self.timestamps[state.value] = time.monotonic()
+
+    def duration(self) -> Optional[float]:
+        a = self.timestamps.get("RUNNING")
+        b = self.timestamps.get("DONE") or self.timestamps.get("FAILED")
+        return (b - a) if a and b else None
+
+    def setup_time(self) -> Optional[float]:
+        a = self.timestamps.get("EXEC_SETUP")
+        b = self.timestamps.get("RUNNING")
+        return (b - a) if a and b else None
+
+
+@dataclass
+class Pipeline:
+    """A design trajectory: an ordered series of stages over M cycles.
+    ``meta`` carries the protocol state (structure, candidates, history)."""
+    name: str
+    meta: Dict[str, Any] = field(default_factory=dict)
+    uid: int = field(default_factory=lambda: next(_uid))
+    parent: Optional[int] = None   # sub-pipelines record their parent
+    cycle: int = 0
+    active: bool = True
+    tasks: List[int] = field(default_factory=list)
+    history: List[Dict[str, float]] = field(default_factory=list)
+
+    @property
+    def is_sub_pipeline(self) -> bool:
+        return self.parent is not None

@@ -1,0 +1,213 @@
+"""The adaptive protein-design protocol (paper §II-C, Fig. 1).
+
+Stages per design cycle:
+  1  ProteinMPNN-analogue generates n_candidates sequences for the structure
+  2  candidates sorted by log-likelihood                     (host-side)
+  3  best candidate compiled into the predict input          (host-side)
+  4  AlphaFold-analogue predicts / scores the complex
+  5  quality metrics gathered (pLDDT, pTM, inter-chain pAE)
+  6  adaptive decision: improved -> accept (structure feeds cycle+1);
+     declined -> re-select next-ranked candidate (<= max_reselections);
+     exhausted -> prune the trajectory.
+  6M+7  after n_cycles accepted cycles the trajectory completes.
+
+Sub-pipelines (paper §II-D): on an accepted cycle, if the runner-up
+candidate is within ``runner_up_window`` log-likelihood of the winner, the
+protocol proposes a sub-pipeline exploring it as an alternative conformation
+— the coordinator submits it only when idle resources exist.
+
+The CONT-V control drops every adaptive element: random candidate choice,
+unconditional accept, no re-selection, no pruning, no sub-pipelines
+(paper §III-A).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import Pipeline, ResourceRequest, Task
+
+AA = 20
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    n_candidates: int = 10
+    max_reselections: int = 10
+    n_cycles: int = 4
+    adaptive: bool = True
+    spawn_sub_pipelines: bool = True
+    runner_up_window: float = 3.0     # LL gap for sub-pipeline spawning
+    max_sub_pipelines: int = 8
+    temperature: float = 1.0
+    structure_lr: float = 0.25        # backbone drift toward accepted seq
+    gen_devices: int = 2
+    predict_devices: int = 1
+    seed: int = 0
+
+
+def fitness(metrics: Dict[str, float]) -> float:
+    """Scalar design quality: pLDDT and pTM up, inter-chain pAE down."""
+    return metrics["plddt"] / 100.0 + metrics["ptm"] - metrics["pae"] / 30.0
+
+
+class ImpressProtocol:
+    """Pure decision logic: consumes task completions, emits new tasks.
+    No threads, no devices — fully unit-testable."""
+
+    def __init__(self, cfg: ProtocolConfig, feat_dim: int = 16):
+        self.cfg = cfg
+        self.feat_dim = feat_dim
+        rng = np.random.default_rng(cfg.seed + 17)
+        # fixed AA embedding used for the structure update (stage 6 -> 1 loop)
+        self._aa_emb = rng.normal(size=(AA + 12, feat_dim)).astype(np.float32)
+        self.n_sub_spawned = 0
+
+    # -- pipeline bootstrap ------------------------------------------------
+
+    def new_pipeline(self, name: str, backbone: np.ndarray,
+                     target: np.ndarray, receptor_len: int,
+                     peptide_tokens: Optional[np.ndarray] = None,
+                     parent: Optional[int] = None,
+                     seed_candidate: Optional[dict] = None) -> Pipeline:
+        if peptide_tokens is None:
+            peptide_tokens = np.arange(1, 7, dtype=np.int32)
+        pl = Pipeline(name=name, parent=parent, meta={
+            "backbone": np.asarray(backbone, np.float32),
+            "target": np.asarray(target, np.float32),
+            "peptide_tokens": np.asarray(peptide_tokens, np.int32),
+            "receptor_len": int(receptor_len),
+            "prev_fitness": None,
+            "candidates": None,       # (seqs (n,L), lls (n,)) sorted
+            "cand_idx": 0,
+            "reselections": 0,
+            "trajectories": 0,
+        })
+        if seed_candidate is not None:
+            pl.meta["candidates"] = seed_candidate
+        return pl
+
+    def first_task(self, pl: Pipeline) -> Task:
+        if pl.meta["candidates"] is not None:   # sub-pipeline: jump to stage 4
+            return self._predict_task(pl)
+        return self._generate_task(pl)
+
+    # -- task builders -----------------------------------------------------
+
+    def _generate_task(self, pl: Pipeline) -> Task:
+        c = self.cfg
+        return Task(kind="generate", pipeline_id=pl.uid, payload={
+            "backbone": pl.meta["backbone"],
+            "n": c.n_candidates,
+            "length": pl.meta["receptor_len"],
+            "temperature": c.temperature,
+            "seed": c.seed + 1000 * pl.uid + pl.cycle,
+        }, resources=ResourceRequest(n_devices=c.gen_devices))
+
+    def _predict_task(self, pl: Pipeline) -> Task:
+        seqs, lls = pl.meta["candidates"]
+        i = pl.meta["cand_idx"]
+        # stage 3: compile receptor design + fixed target peptide (the
+        # "fasta" input) for the structure-prediction task
+        complex_seq = np.concatenate(
+            [np.asarray(seqs[i], np.int32), pl.meta["peptide_tokens"]])
+        return Task(kind="predict", pipeline_id=pl.uid, payload={
+            "sequence": complex_seq,
+            "target": pl.meta["target"],
+            "receptor_len": pl.meta["receptor_len"],
+        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices))
+
+    # -- completions ---------------------------------------------------------
+
+    def on_generate_done(self, pl: Pipeline, result) -> List[Task]:
+        """Stages 2+3: rank by LL (adaptive) or shuffle (control)."""
+        seqs, lls = result                    # (n,L), (n,)
+        order = (np.argsort(-lls) if self.cfg.adaptive
+                 else np.random.default_rng(self.cfg.seed + pl.uid
+                                            + pl.cycle).permutation(len(lls)))
+        pl.meta["candidates"] = (np.asarray(seqs)[order], np.asarray(lls)[order])
+        pl.meta["cand_idx"] = 0
+        pl.meta["reselections"] = 0
+        return [self._predict_task(pl)]
+
+    def on_predict_done(self, pl: Pipeline, metrics: Dict[str, float]
+                        ) -> Dict[str, Any]:
+        """Stage 6 decision. Returns dict with keys:
+        tasks: List[Task]; spawn: Optional[sub-pipeline proposal];
+        event: accepted | reselect | pruned | completed."""
+        c = self.cfg
+        pl.meta["trajectories"] += 1
+        fit = fitness(metrics)
+        prev = pl.meta["prev_fitness"]
+        improved = (prev is None) or (fit > prev) or not c.adaptive
+
+        if not improved:
+            pl.meta["reselections"] += 1
+            pl.meta["cand_idx"] += 1
+            seqs, _ = pl.meta["candidates"]
+            if (pl.meta["reselections"] <= c.max_reselections
+                    and pl.meta["cand_idx"] < len(seqs)):
+                return {"tasks": [self._predict_task(pl)], "spawn": None,
+                        "event": "reselect"}
+            pl.active = False
+            return {"tasks": [], "spawn": None, "event": "pruned"}
+
+        # accepted: record (incl. the design itself — accepted designs are
+        # the training data for §V model evolution), update structure,
+        # advance the cycle
+        seqs, lls = pl.meta["candidates"]
+        chosen = seqs[pl.meta["cand_idx"]]
+        pl.history.append(dict(
+            metrics, fitness=fit, cycle=pl.cycle,
+            cand_idx=pl.meta["cand_idx"],
+            sequence=np.asarray(chosen).tolist(),
+            backbone=np.asarray(pl.meta["backbone"]).tolist()))
+        pl.meta["prev_fitness"] = fit
+        self._update_structure(pl, chosen)
+
+        spawn = None
+        if (c.adaptive and c.spawn_sub_pipelines
+                and self.n_sub_spawned < c.max_sub_pipelines
+                and pl.meta["cand_idx"] + 1 < len(seqs)):
+            j = pl.meta["cand_idx"] + 1
+            if abs(float(lls[pl.meta["cand_idx"]] - lls[j])) <= c.runner_up_window:
+                spawn = {
+                    "name": f"{pl.name}/sub{self.n_sub_spawned}",
+                    "backbone": pl.meta["backbone"].copy(),
+                    "target": pl.meta["target"],
+                    "receptor_len": pl.meta["receptor_len"],
+                    "peptide_tokens": pl.meta["peptide_tokens"],
+                    "parent": pl.uid,
+                    "seed_candidate": (seqs[j:], lls[j:]),
+                    "cycle": pl.cycle,
+                    # sub-pipelines refine: they must beat the parent's
+                    # accepted quality, not restart from scratch
+                    "prev_fitness": fit,
+                }
+
+        pl.cycle += 1
+        if pl.cycle >= c.n_cycles:
+            pl.active = False
+            return {"tasks": [], "spawn": spawn, "event": "completed"}
+        return {"tasks": [self._generate_task(pl)], "spawn": spawn,
+                "event": "accepted"}
+
+    def register_sub_spawn(self):
+        self.n_sub_spawned += 1
+
+    # -- structure feedback (stage 6 -> stage 1 loop) ------------------------
+
+    def _update_structure(self, pl: Pipeline, seq: np.ndarray):
+        """The accepted AlphaFold model feeds the next ProteinMPNN cycle:
+        receptor backbone features drift toward the accepted sequence's
+        embedding (deterministic stand-in for the predicted structure)."""
+        bb = pl.meta["backbone"]
+        R = int(pl.meta["receptor_len"])
+        emb = self._aa_emb[np.asarray(seq[:R]) % self._aa_emb.shape[0]]
+        lr = self.cfg.structure_lr
+        bb = bb.copy()
+        bb[:R] = (1 - lr) * bb[:R] + lr * emb
+        pl.meta["backbone"] = bb

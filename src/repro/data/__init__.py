@@ -1,0 +1,6 @@
+from repro.data.synthetic import (lm_batch, make_batch_iterator,
+                                  protein_design_tasks)
+from repro.data.loader import Prefetcher
+
+__all__ = ["lm_batch", "make_batch_iterator", "protein_design_tasks",
+           "Prefetcher"]

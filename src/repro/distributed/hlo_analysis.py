@@ -1,0 +1,140 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis`` gives FLOPs and HBM bytes of the per-device partitioned
+program but is silent about collectives; we parse the compiled HLO text and
+sum the *result-shape* bytes of every collective op (per-device shard sizes,
+since the module is already partitioned). Global collective bytes = per-chip
+bytes × chips, which makes the two forms of the roofline collective term
+equal:  global/(chips·link_bw) == per_chip/link_bw.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}: ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes per collective kind (result-shape convention)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    out["total"] = 0
+    for m in _LINE_RE.finditer(hlo_text):
+        result_type, op = m.group(1), m.group(2)
+        b = _shape_bytes(result_type)
+        out[op] += b
+        out["total"] += b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline model (TPU v5e constants; DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link (per-chip effective)
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0          # 6·N·D (train) or 2·N_active·D (serve)
+    collectives: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """useful model FLOPs / compiled HLO FLOPs (global)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of peak FLOP/s at the bound, counting only
+        useful model FLOPs: (model_flops/chips/peak) / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_ratio": self.model_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    """flops / bytes from compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return {"flops": flops, "bytes": byts, "raw_keys": len(ca)}

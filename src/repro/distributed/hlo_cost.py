@@ -1,0 +1,305 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's built-in ``cost_analysis`` counts ``while`` bodies exactly once, which
+under-counts scanned-layer programs by ~L×. This walker parses the compiled
+module text, builds the computation call graph (while/call/fusion), and
+multiplies loop-body costs by the ``known_trip_count`` annotation XLA
+attaches to scan-derived loops.
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+  flops     dot = 2·|result|·|contracted dims|; elementwise/transcendental =
+            |result|; reduce = |operand|; data movement = 0.
+  bytes     per instruction: operand + result bytes, with slicing ops
+            counted at touched-bytes (2·|result|), fusion internals free —
+            an HBM-traffic estimate in the spirit of XLA's "bytes accessed".
+  coll      collective result bytes by op kind (per-device shard sizes,
+            post-partitioning).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+TRANSCENDENTAL = {"exponential", "exponential-minus-one", "log", "log-plus-one",
+                  "tanh", "sqrt", "rsqrt", "power", "divide", "sine", "cosine",
+                  "logistic", "atan2", "cbrt", "erf", "remainder"}
+ELEMENTWISE = {"add", "subtract", "multiply", "maximum", "minimum", "and", "or",
+               "xor", "not", "negate", "abs", "sign", "floor", "ceil",
+               "round-nearest-afz", "round-nearest-even", "compare", "select",
+               "clamp", "shift-left", "shift-right-logical",
+               "shift-right-arithmetic", "popcnt", "clz", "is-finite",
+               "stochastic-convert"}
+DATA_MOVE = {"copy", "transpose", "reshape", "broadcast", "slice",
+             "dynamic-slice", "dynamic-update-slice", "concatenate", "gather",
+             "scatter", "convert", "bitcast", "bitcast-convert", "tuple",
+             "get-tuple-element", "parameter", "constant", "iota", "reverse",
+             "pad", "copy-start", "copy-done", "optimization-barrier",
+             "rng-bit-generator", "partition-id", "replica-id", "after-all",
+             "add-dependency", "domain"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast",
+               "all-reduce-start", "all-gather-start",
+               "collective-permute-start"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()})
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+    @property
+    def op_name(self) -> str:
+        m = re.search(r'op_name="([^"]*)"', self.attrs)
+        return m.group(1) if m else ""
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?|[a-z0-9]+\[\]|token\[\])"
+    r"\s+([a-z][\w\-]*)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str):
+    """-> (computations: name -> [Instr], entry_name)"""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        else:
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, tstr, opcode, rest = m.groups()
+                # split args part (up to matching paren) from attrs
+                depth, i = 1, 0
+                while i < len(rest) and depth:
+                    if rest[i] == "(":
+                        depth += 1
+                    elif rest[i] == ")":
+                        depth -= 1
+                    i += 1
+                args, attrs = rest[:i - 1], rest[i:]
+                ops = _OPERAND_RE.findall(args)
+                comps[cur].append(Instr(name, tstr, opcode, ops, attrs))
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALLS_RE = re.compile(r'calls=%?([\w.\-]+)')
+_BODY_RE = re.compile(r'body=%?([\w.\-]+)')
+_COND_RE = re.compile(r'condition=%?([\w.\-]+)')
+_TO_RE = re.compile(r'to_apply=%?([\w.\-]+)')
+_LHS_C_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+
+def analyze(text: str, tag_re: Optional[str] = None):
+    """Walk the module. Returns Cost, or (Cost, tagged_Cost) when ``tag_re``
+    is given — the tagged cost sums only instructions whose op_name metadata
+    matches (e.g. r"flash|_sdpa" to isolate attention-internal traffic)."""
+    comps, entry = parse_hlo(text)
+    tag = re.compile(tag_re) if tag_re else None
+    types: Dict[str, str] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            types[ins.name] = ins.type_str
+
+    memo: Dict[str, Cost] = {}
+
+    # For fusions: a parameter consumed only by (dynamic-)slice ops inside
+    # the fused computation touches only the sliced bytes (scanned stacked
+    # params are the canonical case — without this, loop carries count L×).
+    param_eff: Dict[str, Dict[int, float]] = {}
+
+    def _param_effective(comp: str) -> Dict[int, float]:
+        if comp in param_eff:
+            return param_eff[comp]
+        instrs = comps.get(comp, [])
+        # parameter index: parameter ops appear in index order in HLO text
+        pidx: Dict[str, int] = {}
+        order = [ins for ins in instrs if ins.opcode == "parameter"]
+        for i, ins in enumerate(order):
+            pidx[ins.name] = i
+        eff: Dict[int, float] = {}
+        uses: Dict[str, list] = {}
+        for ins in instrs:
+            for o in ins.operands:
+                if o in pidx:
+                    uses.setdefault(o, []).append(ins)
+        for pname, i in pidx.items():
+            us = uses.get(pname, [])
+            if us and all(u.opcode in ("dynamic-slice", "slice") for u in us):
+                eff[i] = float(sum(_shape_elems_bytes(u.type_str)[1]
+                                   for u in us))
+        param_eff[comp] = eff
+        return eff
+
+    def op_bytes(ins: Instr) -> float:
+        _, rb = _shape_elems_bytes(ins.type_str)
+        if ins.opcode in ("slice", "dynamic-slice", "gather"):
+            return 2.0 * rb
+        if ins.opcode in ("dynamic-update-slice", "scatter"):
+            upd = (_shape_elems_bytes(types.get(ins.operands[1], ""))[1]
+                   if len(ins.operands) > 1 else rb)
+            return 2.0 * upd
+        if ins.opcode in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast", "reshape",
+                          "after-all", "optimization-barrier"):
+            return 0.0
+        total = float(rb)
+        for o in ins.operands:
+            total += _shape_elems_bytes(types.get(o, ""))[1]
+        return total
+
+    def comp_cost(name: str):
+        if name in memo:
+            return memo[name]
+        total = Cost()
+        tagged = Cost()
+        memo[name] = (total, tagged)  # guards cycles
+        for ins in comps.get(name, []):
+            oc = ins.opcode
+            relems, rbytes = _shape_elems_bytes(ins.type_str)
+            hit = bool(tag and tag.search(ins.op_name))
+
+            def acc(c: Cost, h=None):
+                total.__iadd__(c)
+                if (hit if h is None else h):
+                    tagged.__iadd__(c)
+
+            if oc == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trips = int(m.group(1)) if m else 1
+                body = _BODY_RE.search(ins.attrs)
+                cond = _COND_RE.search(ins.attrs)
+                for mm in (body, cond):
+                    if mm:
+                        st, sg = comp_cost(mm.group(1))
+                        total.__iadd__(st.scaled(trips))
+                        tagged.__iadd__(sg.scaled(trips))
+                continue
+            if oc == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                byts = float(_shape_elems_bytes(ins.type_str)[1])
+                if m:
+                    st, sg = comp_cost(m.group(1))
+                    total.__iadd__(Cost(st.flops, 0.0, dict(st.coll)))
+                    tagged.__iadd__(Cost(sg.flops, 0.0, dict(sg.coll)))
+                    eff = _param_effective(m.group(1))
+                    for i, o in enumerate(ins.operands):
+                        byts += eff.get(
+                            i, _shape_elems_bytes(types.get(o, ""))[1])
+                else:
+                    byts = op_bytes(ins)
+                acc(Cost(0.0, byts, {}))
+                continue
+            if oc in ("call", "custom-call", "async-start"):
+                m = _TO_RE.search(ins.attrs) or _CALLS_RE.search(ins.attrs)
+                if m:
+                    st, sg = comp_cost(m.group(1))
+                    total.__iadd__(st)
+                    tagged.__iadd__(sg)
+                continue
+            if oc in ("reduce", "reduce-window"):
+                opb = sum(_shape_elems_bytes(types.get(o, ""))[0]
+                          for o in ins.operands[:max(1, len(ins.operands) // 2)])
+                acc(Cost(float(opb), op_bytes(ins), {}))
+                continue
+            if oc == "dot":
+                lhs_t = types.get(ins.operands[0], "")
+                mdims = _LHS_C_RE.search(ins.attrs)
+                contracted = 1
+                if mdims and lhs_t:
+                    dims_m = _SHAPE_RE.search(lhs_t)
+                    if dims_m:
+                        lhs_dims = [int(d) for d in dims_m.group(2).split(",")
+                                    if d]
+                        for ci in mdims.group(1).split(","):
+                            if ci:
+                                contracted *= lhs_dims[int(ci)]
+                acc(Cost(2.0 * relems * contracted, op_bytes(ins), {}))
+                continue
+            if oc == "convolution":
+                acc(Cost(2.0 * relems, op_bytes(ins), {}))
+                continue
+            if oc in COLLECTIVES or oc.rstrip("-done") in COLLECTIVES:
+                kind = oc.replace("-start", "").replace("-done", "")
+                if oc.endswith("-done"):
+                    continue
+                acc(Cost(0.0, 0.0, {kind: float(rbytes)}))
+                continue
+            if oc in TRANSCENDENTAL or oc in ELEMENTWISE:
+                acc(Cost(float(relems), op_bytes(ins), {}))
+                continue
+            acc(Cost(0.0, op_bytes(ins), {}))
+        memo[name] = (total, tagged)
+        return total, tagged
+
+    # fused computations are only counted via their callers; start from entry
+    total, tagged = comp_cost(entry)
+    return (total, tagged) if tag_re else total

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the compute hot-spots of the assigned architectures
+# (flash attention; RWKV-6 chunked WKV; RG-LRU linear recurrence), each with
+# a jit'd wrapper in ops.py and a token-sequential jnp oracle in ref.py.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,9 @@
+"""Small compat shims over jax.experimental.pallas API drift."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(dimension_semantics):
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=dimension_semantics)

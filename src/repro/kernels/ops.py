@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the Pallas kernels: layout conversion,
+padding to block multiples, and implementation dispatch.
+
+Model code calls these with model-layout tensors; the wrappers convert to
+kernel layout, pad sequence dims, invoke the kernel (TPU-compiled or
+interpret-on-CPU), and slice the padding back off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru as _rg
+from repro.kernels import rwkv6 as _wk
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=False):
+    """Model layout: q (B,S,H,hd); k/v (B,T,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
+    out = _fa.flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, seq_q=S, seq_k=T,
+        interpret=interpret)
+    return out[:, :, :S].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, s0, *, chunk=32, interpret=False):
+    """r/k/v/logw (B,H,T,K); u (H,K); s0 (B,H,K,K).
+    Returns y (B,H,T,K), s_T (B,H,K,K) fp32."""
+    T = r.shape[2]
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    # pad with identity steps (logw=0 -> decay=1, k=v=r=0) if ever needed
+    return _wk.wkv6_bhtk(r, k, v, logw.astype(jnp.float32), u,
+                         s0.astype(jnp.float32), chunk=chunk,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_c",
+                                             "interpret"))
+def rglru(a, b, h0, *, block_t=256, block_c=128, interpret=False):
+    """a/b (B,T,C) f32; h0 (B,C). Returns h (B,T,C) f32, h_T (B,C) f32."""
+    B, T, C = a.shape
+    bt = min(block_t, T)
+    while T % bt:
+        bt -= 1
+    bc = min(block_c, C)
+    while C % bc:
+        bc -= 1
+    return _rg.rglru_btc(a.astype(jnp.float32), b.astype(jnp.float32),
+                         h0.astype(jnp.float32), block_t=bt, block_c=bc,
+                         interpret=interpret)

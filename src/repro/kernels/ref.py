@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every kernel — the most obviously-correct,
+token-sequential implementations. Tests assert the Pallas kernels
+(interpret mode) and the chunked XLA paths against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B,H,Sq,hd); k/v (B,KV,Sk,hd). fp32 masked softmax."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / np.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Token-sequential WKV. r/k/v/logw (B,H,T,K); u (H,K); s0 (B,H,K,K).
+    Returns y (B,H,T,K), s_T (B,H,K,K) fp32."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                     # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + uf[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (rf, kf, vf, lw))
+    s_T, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), s_T
+
+
+def rglru_ref(a, b, h0):
+    """Token-sequential linear recurrence h_t = a_t h_{t-1} + b_t.
+    a/b (B,T,C); h0 (B,C). Returns h (B,T,C), h_T (B,C) fp32."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    h_T, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                           (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_T

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+
+Production target: TPU v5e pods. Single pod = 16×16 = 256 chips,
+axes (data, model); multi-pod = 2×16×16 = 512 chips, axes (pod, data, model).
+The ``pod`` axis is pure data parallelism across pod boundaries (DCN-ish);
+``data`` carries batch + FSDP; ``model`` carries TP/SP/EP.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # host-device simulation may expose more devices than one mesh needs
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_sim_mesh(n_devices: int, shape=None, axes=None):
+    """Small mesh over host devices for examples / runtime simulation."""
+    devs = jax.devices()[:n_devices]
+    shape = shape or (len(devs),)
+    axes = axes or tuple(f"d{i}" for i in range(len(shape)))
+    return jax.sharding.Mesh(np.array(devs).reshape(shape), axes)

@@ -1,0 +1,120 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \\
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck --restore
+
+On a real pod this runs under the production mesh (``--mesh single|multi``)
+with the sharding rules from distributed/sharding.py; on the CPU test host it
+uses whatever devices exist. Checkpoint/restart is automatic: ``--restore``
+resumes from the newest snapshot (training-state + data-cursor), which is the
+fault-tolerance path — kill the process at any step and relaunch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.data import Prefetcher, make_batch_iterator
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh, make_sim_mesh
+from repro.models import lm
+from repro.optim import OptConfig, init_opt_state, make_train_step
+
+
+def build(cfg, opt, mesh=None):
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    opt_state = init_opt_state(params, opt)
+    step_fn = make_train_step(cfg, opt)
+    if mesh is not None:
+        psh = shd.sharding_tree(params, mesh, cfg)
+        osh = {"m": shd.sharding_tree(opt_state["m"], mesh, cfg),
+               "v": shd.sharding_tree(opt_state["v"], mesh, cfg),
+               "count": jax.sharding.NamedSharding(
+                   mesh, jax.sharding.PartitionSpec())}
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        step_fn = jax.jit(step_fn, in_shardings=(psh, osh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    return params, opt_state, step_fn
+
+
+def train(cfg, opt, *, steps, batch, seq, ckpt_dir=None, restore=False,
+          ckpt_every=50, mesh=None, log_every=10, seed=0):
+    params, opt_state, step_fn = build(cfg, opt, mesh)
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if restore and mgr is not None and mgr.latest_step() is not None:
+        state, extra, start = mgr.restore(
+            {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] restored step {start}")
+    it = Prefetcher(make_batch_iterator(cfg, batch, seq, seed=seed,
+                                        start_step=start))
+    losses = []
+    t0 = time.time()
+    ctx = shd.activation_sharding(mesh, cfg) if mesh is not None else None
+    if ctx:
+        ctx.__enter__()
+    try:
+        for i in range(start, steps):
+            b = next(it)
+            params, opt_state, metrics = step_fn(params, opt_state, b)
+            losses.append(float(metrics["loss"]))
+            if (i + 1) % log_every == 0:
+                tok_s = batch * seq * log_every / (time.time() - t0)
+                print(f"[train] step {i + 1} loss={losses[-1]:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"tok/s={tok_s:.0f}", flush=True)
+                t0 = time.time()
+            if mgr is not None and (i + 1) % ckpt_every == 0:
+                mgr.save(i + 1, {"params": params, "opt": opt_state})
+    finally:
+        if ctx:
+            ctx.__exit__(None, None, None)
+        it.close()
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state}, block=True)
+        mgr.wait()
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "sim", "single", "multi"])
+    args = ap.parse_args()
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps, microbatches=args.microbatches)
+    mesh = None
+    if args.mesh == "sim":
+        n = len(jax.devices())
+        mesh = make_sim_mesh(n, (n, 1), ("data", "model"))
+    elif args.mesh in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    _, _, losses = train(cfg, opt, steps=args.steps, batch=args.batch,
+                         seq=args.seq, ckpt_dir=args.ckpt_dir,
+                         restore=args.restore, mesh=mesh)
+    print(f"[train] done. loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Shared model building blocks: init helpers, norms, embeddings, RoPE.
+
+All models are pure-functional: ``init_*`` returns a nested-dict pytree of
+parameters; ``*_fwd`` consumes it. Parameter leaves are created in
+``cfg.param_dtype`` and cast to ``cfg.compute_dtype`` at use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    """Fan-in scaled normal init."""
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, dim=None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def norm_fwd(p, x, cfg):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + cfg.norm_eps)
+    x = x * p["scale"].astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        x = x + p["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"tok": dense_init(key, (cfg.padded_vocab, cfg.d_model), cfg.d_model, dt)}
+    return p
+
+
+def embed_tokens(p, tokens, cfg):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.emb_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x
+
+
+def logits_fwd(params, x, cfg):
+    """Final norm + LM head. ``params`` is the top-level param dict."""
+    x = norm_fwd(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        w = params["embedding"]["tok"]
+        return jnp.einsum("...d,vd->...v", x,
+                          w.astype(jnp.dtype(cfg.compute_dtype)))
+    w = params["lm_head"]["w"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(jnp.dtype(cfg.compute_dtype)))
+
+
+def init_lm_head(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"w": dense_init(key, (cfg.d_model, cfg.padded_vocab), cfg.d_model, dt)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim, cfg):
+    """positions (...,S) int32 -> (..., S, rot/2) angles."""
+    rot = int(head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, rot, 2, np.float32) / rot))
+    return positions[..., None].astype(jnp.float32) * inv, rot
+
+
+def apply_rope(x, positions, cfg):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    ang, rot = rope_angles(positions, hd, cfg)
+    if rot == 0:
+        return x
+    sin, cos = jnp.sin(ang), jnp.cos(ang)          # (..., S, rot/2)
+    if positions.ndim == 1:
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    dt = x.dtype
+    xr = xr.astype(jnp.float32)
+    if cfg.rope_style == "interleaved":
+        x1, x2 = xr[..., 0::2], xr[..., 1::2]
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    else:  # "half": llama style
+        half = rot // 2
+        x1, x2 = xr[..., :half], xr[..., half:]
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.concatenate([o1, o2], axis=-1)
+    return jnp.concatenate([out.astype(dt), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# misc activations
+# ---------------------------------------------------------------------------
+
+
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "relu2": squared_relu,
+    "silu": jax.nn.silu,
+}

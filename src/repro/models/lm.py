@@ -1,0 +1,209 @@
+"""Model assembly: decoder-only LM, encoder-decoder (whisper-style), and
+VLM (patch-prefix) variants — init / train-loss / prefill / decode.
+
+Batch dicts (produced by data/ or input_specs):
+  decoder LM: {"inputs": (B,S) i32, "targets": (B,S) i32}
+  vlm:        + {"patches": (B,P,d) frontend-stub embeddings}; loss on tokens
+  enc-dec:    + {"frames": (B,F,d) frontend-stub embeddings}
+
+Serving:
+  prefill(params, batch)  -> logits_last (B,V), caches
+  decode_step(params, caches, token (B,1), t) -> logits (B,V), caches
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.common import (embed_tokens, init_embedding, init_lm_head,
+                                 init_norm, logits_fwd, split_keys)
+
+
+def init_lm(key, cfg):
+    names = ["emb", "head", "segs", "enc"]
+    ks = split_keys(key, names)
+    p: Dict[str, Any] = {"embedding": init_embedding(ks["emb"], cfg),
+                         "final_norm": init_norm(cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(ks["head"], cfg)
+    seg_keys = jax.random.split(ks["segs"], len(cfg.segments))
+    p["segments"] = [blocks.init_segment(k, kinds, reps, cfg)
+                     for k, (kinds, reps) in zip(seg_keys, cfg.segments)]
+    if cfg.encoder_segments:
+        enc_keys = jax.random.split(ks["enc"], len(cfg.encoder_segments) + 1)
+        p["enc_segments"] = [blocks.init_segment(k, kinds, reps, cfg)
+                             for k, (kinds, reps) in
+                             zip(enc_keys[:-1], cfg.encoder_segments)]
+        p["enc_norm"] = init_norm(cfg)
+    return p
+
+
+def _encode(params, frames, cfg):
+    from repro.models.common import norm_fwd
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    ctx = {"positions": jnp.arange(frames.shape[1]), "enc_out": None}
+    for seg, (kinds, _) in zip(params["enc_segments"], cfg.encoder_segments):
+        x, _ = blocks.segment_fwd(seg, x, kinds, ctx, cfg)
+    return norm_fwd(params["enc_norm"], x, cfg)
+
+
+def _prefix_embed(params, batch, cfg):
+    """Token embeddings, with VLM patches prepended when present.
+    Returns (x, positions, n_prefix)."""
+    x = embed_tokens(params["embedding"], batch["inputs"], cfg)
+    n_prefix = 0
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    positions = jnp.arange(x.shape[1])
+    return x, positions, n_prefix
+
+
+def lm_hidden(params, batch, cfg):
+    """Backbone forward -> (hidden (B,S,d) at token positions, aux)."""
+    enc_out = None
+    if cfg.encoder_segments:
+        enc_out = _encode(params, batch["frames"], cfg)
+    x, positions, n_prefix = _prefix_embed(params, batch, cfg)
+    x = constrain(x, ("batch", "seq", None))
+    ctx = {"positions": positions, "enc_out": enc_out}
+    auxs = {}
+    for seg, (kinds, _) in zip(params["segments"], cfg.segments):
+        x, aux = blocks.segment_fwd(seg, x, kinds, ctx, cfg)
+        if aux:
+            auxs = {k: auxs.get(k, 0.0) + v for k, v in aux.items()}
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return x, auxs
+
+
+def lm_logits(params, batch, cfg):
+    """Full-sequence forward -> (logits, aux)."""
+    x, auxs = lm_hidden(params, batch, cfg)
+    logits = logits_fwd(params, x, cfg)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, auxs
+
+
+def cross_entropy(logits, targets, vocab_size, z_loss=0.0):
+    """Mean CE over valid (target>=0) positions, computed in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss > 0:
+        ce = ce + z_loss * jnp.square(lse)
+    valid = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def _chunked_ce(params, x, targets, cfg):
+    """Sequence-chunked logits+CE: bounds peak memory to one chunk of
+    (tokens/chunks, padded_vocab) fp32 instead of the full-sequence logits.
+    The chunk body is rematerialized in the backward pass."""
+    n = cfg.ce_chunks
+    B, S, d = x.shape
+    assert S % n == 0, (S, n)
+    xc = x.reshape(B, n, S // n, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, S // n).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        xi, ti = xs
+        logits = logits_fwd({"final_norm": params["final_norm"],
+                             **({"lm_head": params["lm_head"]}
+                                if not cfg.tie_embeddings else
+                                {"embedding": params["embedding"]})},
+                            xi, cfg)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(ti, 0)[..., None], axis=-1)[..., 0]
+        valid = (ti >= 0).astype(jnp.float32)
+        s, c = carry
+        return (s + jnp.sum((lse - gold) * valid), c + valid.sum()), None
+
+    (s, c), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, tc))
+    return s / jnp.maximum(c, 1.0)
+
+
+def lm_loss(params, batch, cfg, lb_coef=0.01, z_coef=1e-4):
+    if cfg.ce_chunks > 1:
+        x, aux = lm_hidden(params, batch, cfg)
+        loss = _chunked_ce(params, x, batch["targets"], cfg)
+    else:
+        logits, aux = lm_logits(params, batch, cfg)
+        loss = cross_entropy(logits, batch["targets"], cfg.padded_vocab)
+    metrics = {"ce_loss": loss}
+    if aux:
+        loss = loss + lb_coef * aux.get("moe_lb_loss", 0.0) \
+            + z_coef * aux.get("moe_z_loss", 0.0)
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch, length):
+    return [blocks.init_segment_cache(kinds, reps, cfg, batch, length)
+            for kinds, reps in cfg.segments]
+
+
+def prefill(params, batch, cfg, cache_len: int = 0):
+    """Run the prompt; returns (last-position logits, caches, t_next)."""
+    enc_out = None
+    if cfg.encoder_segments:
+        enc_out = _encode(params, batch["frames"], cfg)
+    x, positions, n_prefix = _prefix_embed(params, batch, cfg)
+    S = x.shape[1]
+    caches = init_caches(cfg, x.shape[0], max(cache_len, S))
+    ctx = {"positions": positions, "enc_out": enc_out}
+    new_caches = []
+    for seg, cache, (kinds, _) in zip(params["segments"], caches, cfg.segments):
+        x, cache = blocks.segment_prefill(seg, x, kinds, ctx, cfg, cache)
+        new_caches.append(cache)
+    logits = logits_fwd(params, x[:, -1:], cfg)[:, 0]
+    return logits, new_caches, S
+
+
+def decode_step(params, caches, token, t, cfg):
+    """token (B,1) i32; t scalar position. Returns (logits (B,V), caches)."""
+    x = embed_tokens(params["embedding"], token, cfg)
+    new_caches = []
+    for seg, cache, (kinds, _) in zip(params["segments"], caches, cfg.segments):
+        x, cache = blocks.segment_decode(seg, x, t, kinds, cfg, cache)
+        new_caches.append(cache)
+    logits = logits_fwd(params, x, cfg)[:, 0]
+    return logits, new_caches
+
+
+def generate(params, batch, cfg, steps, cache_len=0, temperature=0.0, key=None):
+    """Greedy/temperature generation loop (host-side scan)."""
+    logits, caches, t0 = prefill(params, batch, cfg,
+                                 cache_len=cache_len or (batch["inputs"].shape[1] + steps))
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, -1)
+        return jax.random.categorical(k, lg / temperature, axis=-1)
+
+    keys = jax.random.split(key or jax.random.PRNGKey(0), steps)
+    tok = sample(logits, keys[0])[:, None]
+    toks = [tok]
+    for i in range(1, steps):
+        logits, caches = decode_step(params, caches, tok, t0 + i - 1, cfg)
+        tok = sample(logits, keys[i])[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

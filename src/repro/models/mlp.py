@@ -1,0 +1,33 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / squared-ReLU / GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, dense_init, split_keys
+
+
+def init_mlp(key, cfg, d_ff=None):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, ["wi", "wg", "wo"])
+    p = {"wi": dense_init(ks["wi"], (d, f), d, dt),
+         "wo": dense_init(ks["wo"], (f, d), f, dt)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["wg"] = dense_init(ks["wg"], (d, f), d, dt)
+    return p
+
+
+def mlp_fwd(p, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(cdt))
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cdt))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_type == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cdt))
+        h = jax.nn.gelu(g) * h
+    else:
+        h = ACTIVATIONS[cfg.mlp_type if cfg.mlp_type != "relu2" else "relu2"](h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cdt))

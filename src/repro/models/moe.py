@@ -1,0 +1,177 @@
+"""Mixture-of-experts FFN with expert parallelism.
+
+TPU-native "dropping" MoE (GShard/Switch style), but dispatch is done with a
+*scatter* rather than a one-hot matmul, so dispatch cost is O(tokens·k·d)
+memory movement instead of O(tokens·E·C·d) FLOPs.
+
+Tokens are routed within fixed-size *groups* (GShard groups) so that routing
+is independent per group and shards cleanly: the grouped token tensor
+(G, Ng, d) is sharded G→data, while the dispatched buffer (G, E, C, d) and
+expert weights (E, d, f) are sharded E→model (expert parallelism). GSPMD
+inserts the all-to-all between them.
+
+Capacity C = ceil(Ng · top_k · capacity_factor / E), so the expert compute is
+a dense batched einsum — MXU-friendly, static shapes. Overflowing tokens are
+dropped (their residual passes through), underflowed slots are zero.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import active_mode, constrain
+from repro.models.common import dense_init, split_keys
+from repro.models.mlp import init_mlp, mlp_fwd
+
+
+def init_moe(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, E, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = split_keys(key, ["router", "wg", "wi", "wo", "shared"])
+    p = {
+        "router": dense_init(ks["router"], (d, E), d, jnp.float32),
+        "wg": dense_init(ks["wg"], (E, d, f), d, dt),
+        "wi": dense_init(ks["wi"], (E, d, f), d, dt),
+        "wo": dense_init(ks["wo"], (E, f, d), f, dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(ks["shared"], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def capacity(n_group_tokens: int, cfg) -> int:
+    c = math.ceil(n_group_tokens * cfg.moe_top_k * cfg.moe_capacity_factor
+                  / cfg.moe_experts)
+    return max(8, 8 * math.ceil(c / 8))  # sublane-aligned
+
+
+def moe_fwd_dense(p, x, cfg):
+    """Exact (dropless) reference: every expert computes every token, the
+    gate zeroes the unrouted ones. O(E) compute blowup — used for
+    correctness tests and tiny payload models, never at scale."""
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    cdt = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    wmask = jnp.zeros((B, S, E), jnp.float32)
+    wmask = jax.vmap(jax.vmap(lambda m, i, g: m.at[i].set(g)))(wmask, idx, gate)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wi"].astype(cdt))
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g2 = jnp.einsum("bsd,edf->bsef", x, p["wg"].astype(cdt))
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g2) * h
+    else:
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_type == "relu2" else jax.nn.gelu(h)
+    eout = jnp.einsum("bsef,efd->bsed", h, p["wo"].astype(cdt))
+    y = jnp.einsum("bsed,bse->bsd", eout, wmask.astype(cdt))
+    if cfg.moe_shared_expert:
+        y = y + mlp_fwd(p["shared"], x, cfg)
+    density = (wmask > 0).astype(jnp.float32).mean((0, 1))
+    lb = E * jnp.sum(density * probs.mean((0, 1)))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y, {"moe_lb_loss": lb, "moe_z_loss": z,
+               "moe_drop_frac": jnp.zeros(())}
+
+
+def moe_fwd(p, x, cfg, n_groups: int = 0):
+    """x (B, S, d) -> (y (B, S, d), aux dict with load-balance/z losses)."""
+    if cfg.moe_impl == "dense":
+        return moe_fwd_dense(p, x, cfg)
+    with jax.named_scope("moeffn"):
+        return _moe_fwd_capacity(p, x, cfg, n_groups)
+
+
+def _moe_fwd_capacity(p, x, cfg, n_groups: int = 0):
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    G = n_groups or B  # one group per sequence by default
+    # sequence parallelism ends at the expert boundary: groups shard over
+    # data (EP mode) or over *all* devices (fsdp mode, where the model axis
+    # acts as extra data parallelism for the expert region); the
+    # group-internal token axis stays local (routing needs it whole)
+    ep = cfg.moe_parallelism == "ep"
+    gax = "expert_group" if ep else "expert_group_all"
+    tokens = constrain(x.reshape(G, (B * S) // G, d), (gax, None, None))
+    Ng = tokens.shape[1]
+    C = capacity(Ng, cfg)
+
+    logits = jnp.einsum("gnd,de->gne", tokens.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,Ng,E)
+    gate, idx = jax.lax.top_k(probs, k)                          # (G,Ng,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) inside its expert's capacity buffer,
+    # via sort-based ranking: O(Ng·k) memory — never materializes the
+    # (tokens × experts) one-hot (which is ~34 GB/device at 400B scale).
+    eid = idx.reshape(G, Ng * k)                                 # token-major
+
+    def rank_in_expert(e):                                       # (Ng*k,)
+        order = jnp.argsort(e, stable=True)                      # by expert
+        ranks = jnp.zeros_like(e).at[order].set(jnp.arange(e.shape[0]))
+        counts = jnp.zeros((E,), jnp.int32).at[e].add(1, mode="drop")
+        offsets = jnp.cumsum(counts) - counts                    # exclusive
+        return ranks - offsets[e], counts
+
+    pos_in_e, counts = jax.vmap(rank_in_expert)(eid)             # (G,Ng*k)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, eid * C + pos_in_e, E * C)            # OOB -> drop
+
+    # dispatch: scatter token activations into (G, E*C, d). The scatter is
+    # kept *local* (model-replicated): pinning its output to an E-sharded
+    # spec would make GSPMD partition the scatter itself, which lowers to
+    # f32 all-gather + masked all-reduce of the whole token tensor (~260 GB
+    # per device per step at 30B scale). The expert-parallel reshard happens
+    # at the einsum boundary below, where it is a cheap slice.
+    cdt = jnp.dtype(cfg.compute_dtype)
+    src = jnp.repeat(tokens, k, axis=1).astype(cdt)              # (G,Ng*k,d)
+    src = constrain(src, (gax, None, None))
+    disp = jnp.zeros((G, E * C, d), cdt)
+    disp = jax.vmap(lambda b, s, v: b.at[s].set(v, mode="drop"))(disp, slot, src)
+    # serve-time EP: the one-token dispatch tensors are tiny — replicate
+    # them over data and keep the (huge) expert weights fully stationary
+    # (E->model, f->data): zero weight movement per decode step.
+    serve = active_mode() == "serve"       # stationary weights at serve
+    g_ax = None if (serve and ep) else gax
+    f_ax = "data2d" if (serve and ep) else None
+    e_ax = "experts" if (ep or serve) else None
+    disp = constrain(disp.reshape(G, E, C, d), (g_ax, e_ax, None, None))
+
+    # expert FFN (batched over E; sharded E->model = expert parallelism)
+    h = jnp.einsum("gecd,edf->gecf", disp, p["wi"].astype(cdt))
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = jnp.einsum("gecd,edf->gecf", disp, p["wg"].astype(cdt))
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_type == "relu2" else jax.nn.gelu(h)
+    # keep hidden activations f-sharded at serve time so no weight gather
+    # is ever profitable
+    h = constrain(h, (g_ax, e_ax, None, f_ax))
+    eout = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cdt))
+    eout = constrain(eout, (g_ax, e_ax, None, None))
+    eout = constrain(eout.reshape(G, E * C, d), (gax, None, None))
+
+    # combine: all-gather experts back to each group's data shard (the
+    # return leg of the a2a; ~tokens·k·cf·d bytes), then gather locally
+    safe = jnp.where(keep, slot, 0)
+    back = jax.vmap(lambda b, s: b[s])(eout, safe)               # (G,Ng*k,d)
+    back = constrain(back, (gax, None, None))
+    back = back * (keep[..., None] * gate.reshape(G, Ng * k, 1)).astype(cdt)
+    y = back.reshape(G, Ng, k, d).sum(2).reshape(B, S, d)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_fwd(p["shared"], x, cfg)
+
+    # aux losses: Switch load-balance + router z-loss
+    density = counts.astype(jnp.float32) / Ng                    # (G,E) frac routed
+    router_prob = probs.mean(1)                                  # (G,E)
+    lb = E * jnp.mean(jnp.sum(density * router_prob, axis=-1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, {"moe_lb_loss": lb, "moe_z_loss": z, "moe_drop_frac": dropped}

@@ -1,0 +1,145 @@
+"""Protein payload models for the IMPRESS protocol.
+
+ProGen — ProteinMPNN analogue: a structure-conditioned sequence model.
+  The backbone structure is encoded as a fixed-length prefix of structure
+  embeddings (the role ProteinMPNN's graph encoder plays); the decoder
+  autoregressively emits amino-acid tokens. ``sample`` returns N candidate
+  sequences and their log-likelihoods (Stage 1+2 of the pipeline).
+
+FoldScore — AlphaFold analogue: predicts structure-confidence metrics for a
+  (sequence, target) complex: per-residue pLDDT in [0,100], pTM in [0,1] and
+  an inter-chain pAE matrix in [0,30]. A *fixed randomly-initialized*
+  FoldScore is a deterministic smooth function of the sequence — the
+  synthetic fitness landscape the genetic protocol hill-climbs, playing the
+  role AlphaFold's confidence heads play in the paper (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm as lm_mod
+from repro.models.common import dense_init, split_keys
+
+
+class FoldMetrics(NamedTuple):
+    plddt: jax.Array   # (B,) mean per-residue pLDDT, 0..100 (higher better)
+    ptm: jax.Array     # (B,) 0..1 (higher better)
+    pae: jax.Array     # (B,) inter-chain mean pAE, 0..30 (lower better)
+
+
+# ---------------------------------------------------------------------------
+# ProGen
+# ---------------------------------------------------------------------------
+
+
+def init_progen(key, cfg):
+    k1, k2 = jax.random.split(key)
+    params = lm_mod.init_lm(k1, cfg)
+    # structure encoder stub: projects backbone features (B, P, 16) to d
+    params["struct_proj"] = {
+        "w": dense_init(k2, (16, cfg.d_model), 16, jnp.float32)}
+    return params
+
+
+def encode_structure(params, backbone, cfg):
+    """backbone (B, P, 16) coarse features -> prefix embeddings (B,P,d)."""
+    return jnp.einsum("bpf,fd->bpd", backbone.astype(jnp.float32),
+                      params["struct_proj"]["w"]).astype(
+                          jnp.dtype(cfg.compute_dtype))
+
+
+def progen_logprobs(params, backbone, seqs, cfg):
+    """Log-likelihood of sequences (B, L) given structure (B, P, 16)."""
+    patches = encode_structure(params, backbone, cfg)
+    inputs = jnp.concatenate(
+        [jnp.zeros((seqs.shape[0], 1), seqs.dtype), seqs[:, :-1]], axis=1)
+    logits, _ = lm_mod.lm_logits(
+        params, {"inputs": inputs, "targets": seqs, "patches": patches}, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_lp = jnp.take_along_axis(logp, seqs[..., None], axis=-1)[..., 0]
+    return tok_lp.sum(-1)
+
+
+def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0):
+    """Sample n sequences per structure. backbone (B,P,16).
+    Returns (seqs (B,n,L) i32, loglik (B,n))."""
+    B = backbone.shape[0]
+    bb = jnp.repeat(backbone, n, axis=0)                       # (B*n,P,16)
+    patches = encode_structure(params, bb, cfg)
+    key, k0 = jax.random.split(key)
+
+    def step(carry, k):
+        caches, tok, t, lp = carry
+        logits, caches = lm_mod.decode_step(params, caches, tok, t, cfg)
+        logits = logits.astype(jnp.float32)
+        logits = logits.at[:, cfg.vocab_size:].set(-1e30)  # mask pad vocab
+        nxt = jax.random.categorical(k, logits / temperature, axis=-1)
+        step_lp = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, -1), nxt[:, None], -1)[:, 0]
+        return (caches, nxt[:, None], t + 1, lp + step_lp), nxt
+
+    bos = jnp.zeros((B * n, 1), jnp.int32)
+    logits, caches, t0 = lm_mod.prefill(
+        params, {"inputs": bos, "patches": patches}, cfg,
+        cache_len=cfg.frontend_seq + 1 + length)
+    logits = logits.astype(jnp.float32).at[:, cfg.vocab_size:].set(-1e30)
+    first = jax.random.categorical(k0, logits / temperature, axis=-1)
+    lp0 = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                              first[:, None], -1)[:, 0]
+    keys = jax.random.split(key, length - 1)
+    (caches, _, _, lp), toks = jax.lax.scan(
+        step, (caches, first[:, None], t0, lp0), keys)
+    seqs = jnp.concatenate([first[None], toks], axis=0).T       # (B*n, L)
+    return seqs.reshape(B, n, length), lp.reshape(B, n)
+
+
+# ---------------------------------------------------------------------------
+# FoldScore
+# ---------------------------------------------------------------------------
+
+
+def init_foldscore(key, cfg):
+    ks = split_keys(key, ["lm", "plddt", "ptm", "pae_l", "pae_r", "tgt"])
+    params = lm_mod.init_lm(ks["lm"], cfg)
+    d = cfg.d_model
+    params["heads"] = {
+        "plddt": dense_init(ks["plddt"], (d, 1), d, jnp.float32),
+        "ptm": dense_init(ks["ptm"], (d, 1), d, jnp.float32),
+        "pae_l": dense_init(ks["pae_l"], (d, 32), d, jnp.float32),
+        "pae_r": dense_init(ks["pae_r"], (d, 32), d, jnp.float32),
+        "tgt": dense_init(ks["tgt"], (16, d), 16, jnp.float32),
+    }
+    return params
+
+
+def foldscore_fwd(params, seqs, target, cfg, chain_split: int):
+    """seqs (B,L) i32 complex sequence; target (B,16) target descriptor;
+    chain_split = index separating receptor from peptide chain.
+    Returns FoldMetrics."""
+    from repro.models.common import embed_tokens, norm_fwd as _norm
+    from repro.models import blocks as blk
+    x = embed_tokens(params["embedding"], seqs, cfg)
+    x = x + jnp.einsum("bf,fd->bd", target.astype(jnp.float32),
+                       params["heads"]["tgt"])[:, None].astype(x.dtype)
+    ctx = {"positions": jnp.arange(seqs.shape[1]), "enc_out": None}
+    for seg, (kinds, _) in zip(params["segments"], cfg.segments):
+        x, _ = blk.segment_fwd(seg, x, kinds, ctx, cfg)
+    x = _norm(params["final_norm"], x, cfg).astype(jnp.float32)
+    h = params["heads"]
+    plddt_res = 100.0 * jax.nn.sigmoid(
+        jnp.einsum("bld,d->bl", x, h["plddt"][:, 0]))           # (B,L)
+    plddt = plddt_res.mean(-1)
+    ptm = jax.nn.sigmoid(jnp.einsum("bld,d->bl", x, h["ptm"][:, 0]).mean(-1))
+    zl = jnp.einsum("bld,dk->blk", x, h["pae_l"])
+    zr = jnp.einsum("bld,dk->blk", x, h["pae_r"])
+    pae_full = 30.0 * jax.nn.sigmoid(
+        jnp.einsum("bik,bjk->bij", zl, zr) / np.sqrt(32.0))     # (B,L,L)
+    inter = pae_full[:, :chain_split, chain_split:]
+    pae = 0.5 * (inter.mean((-2, -1))
+                 + pae_full[:, chain_split:, :chain_split].mean((-2, -1)))
+    return FoldMetrics(plddt=plddt, ptm=ptm, pae=pae)

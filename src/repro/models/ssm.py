@@ -1,0 +1,288 @@
+"""Recurrent sequence mixers: RWKV-6 (Finch) time/channel mix and the
+Griffin recurrent block (temporal conv + RG-LRU).
+
+Both are written in *chunked* form: projections run over the whole sequence
+(big MXU matmuls), then a ``lax.scan`` over chunks carries the recurrent
+state; within a chunk everything is vectorized. All pairwise decay exponents
+are arranged to be <= 0, so the chunked math is numerically stable without
+clamping tricks. A token-level sequential oracle lives in kernels/ref.py.
+
+State pytrees (used for decode and as prefill output):
+  rwkv:  {"S": (B,H,K,K), "shift_tm": (B,d), "shift_cm": (B,d)}
+  rglru: {"h": (B,C), "conv": (B,W-1,C)}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, split_keys
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_rwkv(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    names = ["wr", "wk", "wv", "wg", "wo", "wck", "wcv", "wcr",
+             "aw", "bw"] + [f"a_{s}" for s in "rkvgw"] + [f"b_{s}" for s in "rkvgw"]
+    ks = split_keys(key, names)
+    p = {
+        "mu_x": jnp.zeros((d,), dt), "u": 0.5 * jnp.ones((d,), dt),
+        "w0": jnp.log(jnp.expm1(jnp.linspace(0.3, 6.0, d))).astype(dt),
+        "aw": dense_init(ks["aw"], (d, LORA_DECAY), d, dt) * 0.1,
+        "bw": dense_init(ks["bw"], (LORA_DECAY, d), LORA_DECAY, dt) * 0.1,
+        "wr": dense_init(ks["wr"], (d, d), d, dt),
+        "wk": dense_init(ks["wk"], (d, d), d, dt),
+        "wv": dense_init(ks["wv"], (d, d), d, dt),
+        "wg": dense_init(ks["wg"], (d, d), d, dt),
+        "wo": dense_init(ks["wo"], (d, d), d, dt),
+        "gn_scale": jnp.ones((d,), dt), "gn_bias": jnp.zeros((d,), dt),
+        # channel mix
+        "mu_ck": 0.5 * jnp.ones((d,), dt), "mu_cr": 0.5 * jnp.ones((d,), dt),
+        "wck": dense_init(ks["wck"], (d, f), d, dt),
+        "wcv": dense_init(ks["wcv"], (f, d), f, dt),
+        "wcr": dense_init(ks["wcr"], (d, d), d, dt),
+    }
+    for s in "rkvgw":
+        p[f"mu_{s}"] = 0.5 * jnp.ones((d,), dt)
+        p[f"a_{s}"] = dense_init(ks[f"a_{s}"], (d, LORA_MIX), d, dt) * 0.1
+        p[f"b_{s}"] = dense_init(ks[f"b_{s}"], (LORA_MIX, d), LORA_MIX, dt) * 0.1
+    return p
+
+
+def init_rwkv_state(cfg, batch, dtype=jnp.float32):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    K = cfg.rwkv_head_dim
+    return {"S": jnp.zeros((batch, H, K, K), dtype),
+            "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def _ddlerp(p, s, x, dx, xx):
+    """Finch data-dependent token-shift interpolation for stream s."""
+    lora = jnp.tanh(xx @ p[f"a_{s}"].astype(xx.dtype)) @ p[f"b_{s}"].astype(xx.dtype)
+    return x + dx * (p[f"mu_{s}"].astype(x.dtype) + lora)
+
+
+def rwkv_streams(p, x, shift_prev, cfg):
+    """Compute r,k,v,g,logw for a whole sequence. x (B,T,d)."""
+    cdt = x.dtype
+    xs = jnp.concatenate([shift_prev[:, None].astype(cdt), x[:, :-1]], axis=1)
+    dx = xs - x
+    xx = x + dx * p["mu_x"].astype(cdt)
+    r = _ddlerp(p, "r", x, dx, xx) @ p["wr"].astype(cdt)
+    k = _ddlerp(p, "k", x, dx, xx) @ p["wk"].astype(cdt)
+    v = _ddlerp(p, "v", x, dx, xx) @ p["wv"].astype(cdt)
+    g = jax.nn.silu(_ddlerp(p, "g", x, dx, xx) @ p["wg"].astype(cdt))
+    mw = _ddlerp(p, "w", x, dx, xx)
+    logw = -jnp.exp(jnp.clip(
+        (p["w0"].astype(jnp.float32)
+         + (jnp.tanh(mw @ p["aw"].astype(cdt)) @ p["bw"].astype(cdt))
+         .astype(jnp.float32)), -12.0, 5.0))            # logw in [-e^5, ~0)
+    logw = jnp.minimum(logw, -1e-6)
+    return r, k, v, g, logw
+
+
+def _heads(x, K):
+    B, T, d = x.shape
+    return x.reshape(B, T, d // K, K).transpose(0, 2, 1, 3)  # (B,H,T,K)
+
+
+def wkv6_chunked(r, k, v, logw, u, S0, chunk=32):
+    """Chunked WKV scan. r,k,v (B,H,T,K) ; logw (B,H,T,K) fp32 ; u (H,K).
+
+    y_t = r_t·(S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y (B,H,T,K), S_T (B,H,K,K) fp32.
+    """
+    B, H, T, K = r.shape
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    n = T // chunk
+    dt = r.dtype
+    rc = r.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    wc = logw.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def body(S, xs):
+        rr, kk, vv, lw = xs                       # (B,H,C,K)
+        cl = jnp.cumsum(lw, axis=2)               # inclusive
+        ecl = cl - lw                             # exclusive
+        # carry: r~_t = r_t * exp(ecl_t) ; y_carry = r~ @ S
+        rt = rr.astype(jnp.float32) * jnp.exp(ecl)
+        y = jnp.einsum("bhtk,bhkv->bhtv", rt, S)
+        # intra-chunk pairwise decays D[t,j,k] = exp(ecl_t - cl_j), j < t.
+        # Valid (j<t) exponents are always <=0; clamp the (masked-out) upper
+        # triangle at 0 so exp never overflows into the mask multiply.
+        # (Measured: casting D to bf16 does NOT help the XLA path — the
+        # 3-operand einsum materializes a same-sized f32 intermediate; the
+        # real fix is the Pallas kernel, which keeps D in VMEM.)
+        D = jnp.exp(jnp.minimum(ecl[:, :, :, None, :] - cl[:, :, None, :, :], 0.0))
+        scores = jnp.einsum("bhtk,bhjk,bhtjk->bhtj",
+                            rr.astype(jnp.float32), kk.astype(jnp.float32), D)
+        scores = scores * tri[None, None]
+        # bonus (current token) term: (r_t · (u ⊙ k_t)) v_t
+        bonus = jnp.einsum("bhtk,hk,bhtk->bht", rr.astype(jnp.float32),
+                           u.astype(jnp.float32), kk.astype(jnp.float32))
+        y = y + jnp.einsum("bhtj,bhjv->bhtv", scores, vv.astype(jnp.float32))
+        y = y + bonus[..., None] * vv.astype(jnp.float32)
+        # state update: S' = diag(exp(cl_T)) S + sum_j exp(cl_T - cl_j) k_j v_j^T
+        decay_T = jnp.exp(cl[:, :, -1:, :])                       # (B,H,1,K)
+        kdec = kk.astype(jnp.float32) * jnp.exp(cl[:, :, -1:, :] - cl)
+        S = S * decay_T.transpose(0, 1, 3, 2) + \
+            jnp.einsum("bhjk,bhjv->bhkv", kdec, vv.astype(jnp.float32))
+        return S, y.astype(dt)
+
+    with jax.named_scope("wkvscan"):
+        S_T, ys = jax.lax.scan(body, S0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, T, K)
+    return y, S_T
+
+
+def rwkv_timemix(p, x, state, cfg, chunk=None):
+    """Full time-mix layer over a sequence. Returns (y, new_state)."""
+    B, T, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    chunk = chunk or cfg.rwkv_chunk
+    r, k, v, g, logw = rwkv_streams(p, x, state["shift_tm"], cfg)
+    u = p["u"].astype(jnp.float32).reshape(H, K)
+    rh, kh, vh = _heads(r, K), _heads(k, K), _heads(v, K)
+    wh = _heads(logw, K)
+    if cfg.ssm_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        y, S = kops.wkv6(rh, kh, vh, wh, u, state["S"],
+                         interpret=(cfg.ssm_impl == "pallas_interpret"))
+    else:
+        y, S = wkv6_chunked(rh, kh, vh, wh, u, state["S"], chunk=chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d)
+    # per-head group norm
+    yg = y.reshape(B, T, H, K).astype(jnp.float32)
+    mu = yg.mean(-1, keepdims=True)
+    var = yg.var(-1, keepdims=True)
+    yg = ((yg - mu) * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, T, d)
+    y = (yg * p["gn_scale"].astype(jnp.float32)
+         + p["gn_bias"].astype(jnp.float32)).astype(x.dtype)
+    y = (y * g) @ p["wo"].astype(x.dtype)
+    new_state = {"S": S, "shift_tm": x[:, -1].astype(jnp.float32),
+                 "shift_cm": state["shift_cm"]}
+    return y, new_state
+
+
+def rwkv_channelmix(p, x, state, cfg):
+    cdt = x.dtype
+    xs = jnp.concatenate([state["shift_cm"][:, None].astype(cdt), x[:, :-1]], 1)
+    dx = xs - x
+    xk = x + dx * p["mu_ck"].astype(cdt)
+    xr = x + dx * p["mu_cr"].astype(cdt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wck"].astype(cdt)))
+    y = jax.nn.sigmoid(xr @ p["wcr"].astype(cdt)) * (kk @ p["wcv"].astype(cdt))
+    state = dict(state, shift_cm=x[:, -1].astype(jnp.float32))
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block (temporal conv + RG-LRU)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, C, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = split_keys(key, ["win", "wgate", "conv", "wr", "wi", "wout", "lam"])
+    lam = jax.random.uniform(ks["lam"], (C,), jnp.float32, 0.9, 0.999)
+    return {
+        "win": dense_init(ks["win"], (d, C), d, dt),
+        "wgate": dense_init(ks["wgate"], (d, C), d, dt),
+        "conv_w": dense_init(ks["conv"], (W, C), W, dt),
+        "conv_b": jnp.zeros((C,), dt),
+        "wr": dense_init(ks["wr"], (C, C), C, dt),
+        "br": jnp.zeros((C,), dt),
+        "wi": dense_init(ks["wi"], (C, C), C, dt),
+        "bi": jnp.zeros((C,), dt),
+        "lam": jnp.log(lam / (1 - lam)).astype(dt),   # logit of a
+        "wout": dense_init(ks["wout"], (C, d), C, dt),
+    }
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, cfg.lru_width), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype)}
+
+
+def _rglru_gates(p, u):
+    """u (B,T,C) post-conv branch -> (log_a fp32, gated input fp32)."""
+    r = jax.nn.sigmoid(u @ p["wr"].astype(u.dtype) + p["br"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["wi"].astype(u.dtype) + p["bi"].astype(u.dtype))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))     # (C,)
+    log_a = RGLRU_C * r.astype(jnp.float32) * log_a0              # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * \
+        (i * u).astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(a, b, h0, chunk=256):
+    """h_t = a_t h_{t-1} + b_t via chunked associative scan.
+    a,b (B,T,C) fp32; h0 (B,C). Returns h (B,T,C), h_T."""
+    B, T, C = a.shape
+    n = max(T // chunk, 1)
+    while T % n:
+        n -= 1
+    chunk = T // n
+    ac = a.reshape(B, n, chunk, C).transpose(1, 0, 2, 3)
+    bc = b.reshape(B, n, chunk, C).transpose(1, 0, 2, 3)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        aa, bb = xs
+        A, Bc = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+        hs = A * h[:, None] + Bc
+        return hs[:, -1], hs
+
+    with jax.named_scope("rgscan"):
+        h_T, hs = jax.lax.scan(body, h0, (ac, bc))
+    return hs.transpose(1, 0, 2, 3).reshape(B, T, C), h_T
+
+
+def causal_conv1d(u, w, b, prev):
+    """Depthwise causal conv. u (B,T,C); w (W,C); prev (B,W-1,C)."""
+    W = w.shape[0]
+    x = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(x[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+              for i in range(W))
+    return out + b.astype(u.dtype), x[:, -(W - 1):]
+
+
+def rglru_block(p, x, state, cfg):
+    """Full Griffin recurrent block over a sequence. x (B,T,d)."""
+    cdt = x.dtype
+    gate = jax.nn.gelu(x @ p["wgate"].astype(cdt))
+    u = x @ p["win"].astype(cdt)
+    u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], state["conv"])
+    a, b = _rglru_gates(p, u)
+    if cfg.ssm_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        h, h_T = kops.rglru(a, b, state["h"],
+                            interpret=(cfg.ssm_impl == "pallas_interpret"))
+    else:
+        h, h_T = rglru_scan(a, b, state["h"].astype(jnp.float32))
+    y = (gate * h.astype(cdt)) @ p["wout"].astype(cdt)
+    return y, {"h": h_T, "conv": conv_state.astype(jnp.float32)}

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (OptConfig, init_opt_state, adamw_update,
+                                    global_norm, clip_by_global_norm)
+from repro.optim.schedules import make_schedule
+from repro.optim.train_step import make_train_step
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "global_norm",
+           "clip_by_global_norm", "make_schedule", "make_train_step"]

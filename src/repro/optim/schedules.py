@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_schedule(opt):
+    base, warm, total = opt.lr, opt.warmup_steps, opt.total_steps
+    floor = opt.min_lr_frac * base
+
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm_lr = base * (step + 1) / max(warm, 1)
+        frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        if opt.schedule == "cosine":
+            decayed = floor + 0.5 * (base - floor) * (1 + jnp.cos(np.pi * frac))
+        elif opt.schedule == "linear":
+            decayed = base + (floor - base) * frac
+        else:
+            decayed = base
+        return jnp.where(step < warm, warm_lr, decayed)
+
+    return fn

@@ -1,0 +1,59 @@
+"""Train-step builder: value_and_grad + optional gradient-accumulation
+microbatching (lax.scan) + clipping + AdamW + schedule.
+
+The returned function is pure and jit/pjit-able:
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching reshapes the leading batch axis to (n_micro, B/n_micro, ...)
+and accumulates gradients in fp32 across a scan — the standard trick that
+bounds activation memory at large global batch. The cross-device gradient
+reduction stays a single (reduce-scattered, under FSDP) collective because
+accumulation happens before the optimizer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.optimizers import (OptConfig, adamw_update,
+                                    clip_by_global_norm)
+from repro.optim.schedules import make_schedule
+
+
+def make_train_step(cfg, opt: OptConfig, loss_fn=None):
+    schedule = make_schedule(opt)
+    loss_fn = loss_fn or (lambda p, b: lm.lm_loss(p, b, cfg, z_coef=opt.z_loss))
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if opt.microbatches > 1:
+            n = opt.microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def body(acc, micro):
+                g, m = grads_of(params, micro)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / n, acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, mb)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, opt.clip_norm)
+        lr = schedule(opt_state["count"])
+        params, opt_state = adamw_update(grads, opt_state, params, opt, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step

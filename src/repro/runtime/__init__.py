@@ -1,0 +1,5 @@
+from repro.runtime.allocator import DeviceAllocator, SubMesh
+from repro.runtime.executor import AsyncExecutor
+from repro.runtime.scheduler import TaskQueue
+
+__all__ = ["DeviceAllocator", "SubMesh", "AsyncExecutor", "TaskQueue"]

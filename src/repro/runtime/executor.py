@@ -1,0 +1,209 @@
+"""Asynchronous task executor over dynamically-allocated sub-meshes — the
+RADICAL-Pilot analogue (DESIGN.md §2).
+
+Two channels, as in the paper's implementation: a *submission* channel
+(``submit``/TaskQueue) and a *completion* channel (``completions`` queue the
+coordinator drains). Worker threads take QUEUED tasks, allocate a sub-mesh,
+run the registered payload function, and emit the finished task. JAX's async
+dispatch means workers overlap host logic with device compute; independent
+sub-meshes execute concurrently.
+
+Fault tolerance: payload exceptions requeue the task up to ``max_retries``;
+``inject_device_failure`` removes a device (elastic shrink) and requeues the
+tasks whose allocation it hit. Straggler mitigation: a watchdog duplicates
+tasks running longer than ``straggler_factor`` × the median duration of
+their kind when spare capacity exists; first finisher wins.
+"""
+
+from __future__ import annotations
+
+import queue
+import statistics
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.pipeline import TERMINAL, Task, TaskState
+from repro.runtime.allocator import DeviceAllocator, SubMesh
+from repro.runtime.scheduler import TaskQueue
+
+
+class AsyncExecutor:
+    def __init__(self, allocator: DeviceAllocator, *, max_workers: int = 8,
+                 max_retries: int = 1, backfill: bool = True,
+                 straggler_factor: Optional[float] = None,
+                 min_straggler_samples: int = 3):
+        self.allocator = allocator
+        self.queue = TaskQueue(backfill=backfill)
+        self.completions: "queue.Queue[Task]" = queue.Queue()
+        self.max_retries = max_retries
+        self.straggler_factor = straggler_factor
+        self.min_straggler_samples = min_straggler_samples
+        self._fns: Dict[str, Callable[[SubMesh, dict], Any]] = {}
+        self._tasks: Dict[int, Task] = {}
+        self._durations: Dict[str, List[float]] = {}
+        self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._workers = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(max_workers)]
+        for w in self._workers:
+            w.start()
+        self._watchdog = None
+        if straggler_factor:
+            self._watchdog = threading.Thread(target=self._watch, daemon=True)
+            self._watchdog.start()
+
+    # -- registration / submission ---------------------------------------
+
+    def register(self, kind: str, fn: Callable[[SubMesh, dict], Any]):
+        self._fns[kind] = fn
+
+    def submit(self, task: Task):
+        with self._lock:
+            self._tasks[task.uid] = task
+        task.set_state(TaskState.QUEUED)
+        self.queue.push(task)
+        self._wake.set()
+
+    def cancel(self, uid: int):
+        t = self.queue.remove(uid)
+        if t is not None:
+            t.canceled = True
+            t.set_state(TaskState.CANCELED)
+            self.completions.put(t)
+            return
+        with self._lock:
+            entry = self._running.get(uid)
+        if entry:
+            entry[0].canceled = True  # cooperative
+
+    # -- worker loop -------------------------------------------------------
+
+    def _worker(self):
+        while not self._stop.is_set():
+            task = self.queue.pop_fitting(self.allocator.can_fit)
+            if task is None:
+                self._wake.wait(timeout=0.01)
+                self._wake.clear()
+                continue
+            sub = self.allocator.request(task.resources.n_devices,
+                                         task.resources.preferred_shape)
+            if sub is None:  # raced; try again later
+                self.queue.push(task)
+                continue
+            task.set_state(TaskState.SCHEDULED)
+            with self._lock:
+                self._running[task.uid] = (task, sub, time.monotonic())
+            try:
+                task.set_state(TaskState.EXEC_SETUP)
+                fn = self._fns[task.kind]
+                task.set_state(TaskState.RUNNING)
+                result = fn(sub, task.payload)
+                if task.canceled:
+                    task.set_state(TaskState.CANCELED)
+                else:
+                    task.result = result
+                    task.set_state(TaskState.DONE)
+                    d = task.duration()
+                    if d is not None:
+                        self._durations.setdefault(task.kind, []).append(d)
+            except Exception as e:  # noqa: BLE001 — any payload failure
+                task.error = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
+                if task.retries < self.max_retries and not task.canceled:
+                    task.retries += 1
+                    with self._lock:
+                        self._running.pop(task.uid, None)
+                    self.allocator.release(sub)
+                    task.set_state(TaskState.QUEUED)
+                    self.queue.push(task)
+                    self._wake.set()
+                    continue
+                task.set_state(TaskState.FAILED)
+            with self._lock:
+                self._running.pop(task.uid, None)
+            self.allocator.release(sub)
+            self._wake.set()
+            self.completions.put(task)
+
+    # -- straggler watchdog --------------------------------------------
+
+    def _watch(self):
+        while not self._stop.is_set():
+            time.sleep(0.02)
+            now = time.monotonic()
+            with self._lock:
+                running = list(self._running.values())
+            for task, sub, t0 in running:
+                hist = self._durations.get(task.kind, [])
+                if len(hist) < self.min_straggler_samples:
+                    continue
+                med = statistics.median(hist)
+                if (now - t0) > self.straggler_factor * med \
+                        and task.speculative_of is None \
+                        and not task.canceled \
+                        and self.allocator.can_fit(task.resources.n_devices):
+                    dup_ids = [t.speculative_of for t, _, _ in running]
+                    if task.uid in dup_ids:
+                        continue  # already duplicated
+                    dup = Task(kind=task.kind, payload=task.payload,
+                               resources=task.resources,
+                               priority=task.priority - 1,
+                               pipeline_id=task.pipeline_id,
+                               speculative_of=task.uid)
+                    self.submit(dup)
+
+    # -- draining ----------------------------------------------------------
+
+    def drain(self, timeout: Optional[float] = None) -> Optional[Task]:
+        try:
+            return self.completions.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self.queue) + len(self._running)
+
+    def inject_device_failure(self, device) -> List[Task]:
+        """Simulate a node failure: shrink the pool, requeue affected tasks."""
+        hit = self.allocator.mark_failed(device)
+        requeued = []
+        with self._lock:
+            running = list(self._running.values())
+        for task, sub, _ in running:
+            if any(sub.uid == h.uid for h in hit):
+                task.canceled = True  # cooperative cancel of doomed run
+                clone = Task(kind=task.kind, payload=task.payload,
+                             resources=task.resources, priority=task.priority,
+                             pipeline_id=task.pipeline_id)
+                clone.retries = task.retries
+                self.submit(clone)
+                requeued.append(clone)
+        return requeued
+
+    def shutdown(self, wait: bool = True):
+        self._stop.set()
+        self._wake.set()
+        if wait:
+            for w in self._workers:
+                w.join(timeout=2.0)
+
+    # -- metrics -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        done = [t for t in self._tasks.values() if t.state == TaskState.DONE]
+        setup = [t.setup_time() for t in done if t.setup_time()]
+        run = [t.duration() for t in done if t.duration()]
+        return {
+            "n_tasks": len(self._tasks),
+            "n_done": len(done),
+            "n_failed": sum(1 for t in self._tasks.values()
+                            if t.state == TaskState.FAILED),
+            "n_retried": sum(t.retries for t in self._tasks.values()),
+            "utilization": self.allocator.utilization(),
+            "mean_exec_setup_s": sum(setup) / len(setup) if setup else 0.0,
+            "mean_running_s": sum(run) / len(run) if run else 0.0,
+        }

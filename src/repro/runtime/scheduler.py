@@ -1,0 +1,55 @@
+"""Task queue with priority + HPC-style backfill.
+
+FIFO within priority, but when the head task does not fit the currently-free
+devices, a smaller lower-priority task may be *backfilled* ahead of it — the
+mechanism that lets IMPRESS sub-pipelines soak up idle devices while a big
+pipeline waits for a large allocation (the paper's "offloading newly created
+pipelines to the idle resources when possible").
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+from repro.core.pipeline import Task
+
+
+class TaskQueue:
+    def __init__(self, backfill: bool = True):
+        self._items: List[Task] = []
+        self._lock = threading.Lock()
+        self.backfill = backfill
+
+    def push(self, task: Task):
+        with self._lock:
+            self._items.append(task)
+            self._items.sort(key=lambda t: (t.priority, t.uid))
+
+    def pop_fitting(self, fits: Callable[[int], bool]) -> Optional[Task]:
+        """Pop the highest-priority task; if it doesn't fit and backfill is
+        on, pop the first one that does."""
+        with self._lock:
+            if not self._items:
+                return None
+            for i, task in enumerate(self._items):
+                if fits(task.resources.n_devices):
+                    return self._items.pop(i)
+                if not self.backfill:
+                    return None
+            return None
+
+    def remove(self, uid: int) -> Optional[Task]:
+        with self._lock:
+            for i, t in enumerate(self._items):
+                if t.uid == uid:
+                    return self._items.pop(i)
+        return None
+
+    def __len__(self):
+        with self._lock:
+            return len(self._items)
+
+    def snapshot(self) -> List[Task]:
+        with self._lock:
+            return list(self._items)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the default single CPU device — the 512-device dry-run sets
+# its own XLA_FLAGS (never set globally here; see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

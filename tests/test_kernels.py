@@ -1,0 +1,120 @@
+"""Per-kernel validation: Pallas (interpret mode) and chunked-XLA paths vs
+the token-sequential jnp oracles in kernels/ref.py, swept over shapes and
+dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+from repro.models import ssm
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 12)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 2, 2, 64, 16), (2, 4, 2, 80, 32), (1, 8, 1, 128, 64), (2, 6, 3, 96, 16),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(B, H, KV, S, hd, causal, window, dtype):
+    q = jax.random.normal(KEYS[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(KEYS[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(KEYS[2], (B, S, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    exp = ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        window=window).transpose(0, 2, 1, 3)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(exp, np.float32),
+                    **tol(dtype))
+
+
+def test_flash_attention_softcap():
+    B, H, KV, S, hd = 1, 2, 2, 64, 16
+    q = jax.random.normal(KEYS[3], (B, S, H, hd))
+    k = jax.random.normal(KEYS[4], (B, S, KV, hd))
+    v = jax.random.normal(KEYS[5], (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, causal=True, softcap=20.0,
+                              block_q=32, block_k=32, interpret=True)
+    exp = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            softcap=20.0).transpose(0, 2, 1, 3)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,T,K,chunk", [
+    (1, 1, 32, 8, 8), (2, 3, 64, 16, 16), (1, 2, 48, 32, 16), (2, 2, 33, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_vs_ref(B, H, T, K, chunk, dtype):
+    r = (0.5 * jax.random.normal(KEYS[0], (B, H, T, K))).astype(dtype)
+    k = (0.5 * jax.random.normal(KEYS[1], (B, H, T, K))).astype(dtype)
+    v = (0.5 * jax.random.normal(KEYS[2], (B, H, T, K))).astype(dtype)
+    logw = -jnp.exp(jax.random.normal(KEYS[3], (B, H, T, K)))
+    u = 0.3 * jnp.ones((H, K))
+    s0 = 0.1 * jax.random.normal(KEYS[4], (B, H, K, K))
+    y1, s1 = ops.wkv6(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    y2, s2 = ref.wkv6_ref(r, k, v, logw, u, s0)
+    assert_allclose(np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+                    **tol(dtype))
+    assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 32])
+def test_wkv6_xla_chunked_vs_ref(chunk):
+    B, H, T, K = 2, 2, 64, 16
+    r = 0.5 * jax.random.normal(KEYS[5], (B, H, T, K))
+    k = 0.5 * jax.random.normal(KEYS[6], (B, H, T, K))
+    v = 0.5 * jax.random.normal(KEYS[7], (B, H, T, K))
+    logw = -jnp.exp(jax.random.normal(KEYS[8], (B, H, T, K)))
+    u = 0.3 * jnp.ones((H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    y1, s1 = ssm.wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y2, s2 = ref.wkv6_ref(r, k, v, logw, u, s0)
+    assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5, rtol=2e-4)
+    assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,C,bt,bc", [
+    (1, 32, 8, 8, 8), (2, 96, 40, 32, 8), (2, 64, 128, 64, 128), (1, 50, 24, 16, 8),
+])
+def test_rglru_pallas_vs_ref(B, T, C, bt, bc):
+    a = jax.nn.sigmoid(jax.random.normal(KEYS[9], (B, T, C)))
+    b = 0.3 * jax.random.normal(KEYS[10], (B, T, C))
+    h0 = jax.random.normal(KEYS[11], (B, C))
+    h1, hT1 = ops.rglru(a, b, h0, block_t=bt, block_c=bc, interpret=True)
+    h2, hT2 = ref.rglru_ref(a, b, h0)
+    assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-5)
+    assert_allclose(np.asarray(hT1), np.asarray(hT2), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_xla_assoc_vs_ref():
+    B, T, C = 2, 100, 24
+    a = jax.nn.sigmoid(jax.random.normal(KEYS[0], (B, T, C)))
+    b = 0.3 * jax.random.normal(KEYS[1], (B, T, C))
+    h0 = jax.random.normal(KEYS[2], (B, C))
+    h1, hT1 = ssm.rglru_scan(a, b, h0, chunk=25)
+    h2, hT2 = ref.rglru_ref(a, b, h0)
+    assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-4)
+    assert_allclose(np.asarray(hT1), np.asarray(hT2), atol=1e-5, rtol=1e-4)

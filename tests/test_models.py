@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests (reduced configs) + serving equivalences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced, SHAPES_BY_NAME, \
+    shape_applicable
+from repro.models import lm
+from repro.optim import OptConfig, init_opt_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16, key=KEY):
+    batch = {"inputs": jax.random.randint(key, (B, S), 1, cfg.vocab_size),
+             "targets": jax.random.randint(key, (B, S), 1, cfg.vocab_size)}
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = 0.02 * jax.random.normal(
+            key, (B, cfg.frontend_seq, cfg.d_model))
+    elif cfg.frontend == "audio_frames":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (B, cfg.frontend_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: output shapes
+    correct, loss finite, params updated, no NaNs anywhere."""
+    cfg = get_reduced(arch)
+    params = lm.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    logits, _ = lm.lm_logits(params, batch, cfg)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_opt_state(params, opt)
+    step = make_train_step(cfg, opt)
+    new_params, state, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["count"]) == 1
+    # at least one leaf moved
+    moved = any(bool(jnp.any(a != b)) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+    assert not any(bool(jnp.isnan(x).any())
+                   for x in jax.tree.leaves(new_params))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_matches_full_forward(arch):
+    """Serving invariant: prefill + token-by-token decode reproduces the
+    full-sequence logits (fp32; MoE uses the exact dense path)."""
+    cfg = get_reduced(arch).replace(compute_dtype="float32")
+    if cfg.moe_experts:
+        cfg = cfg.replace(moe_impl="dense")
+    params = lm.init_lm(KEY, cfg)
+    B, S, S0 = 2, 12, 8
+    batch = make_batch(cfg, B, S, key=jax.random.PRNGKey(3))
+    P = cfg.frontend_seq if cfg.frontend == "vision_patches" else 0
+    full, _ = lm.lm_logits(params, batch, cfg)
+    pb = dict(batch)
+    pb["inputs"] = batch["inputs"][:, :S0]
+    logits, caches, t = lm.prefill(params, pb, cfg, cache_len=P + S)
+    errs = [float(jnp.abs(logits - full[:, S0 - 1]).max())]
+    for i in range(S0, S):
+        logits, caches = lm.decode_step(
+            params, caches, batch["inputs"][:, i:i + 1], t, cfg)
+        t += 1
+        errs.append(float(jnp.abs(logits - full[:, i]).max()))
+    assert max(errs) < 5e-4, errs
+
+
+def test_full_configs_match_assigned_table():
+    """The full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 6144, 151936),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    }
+    for arch, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        assert cfg.d_ff == ff and cfg.vocab_size == V
+    assert get_config("llama4-maverick-400b-a17b").moe_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe_top_k == 1
+    assert get_config("qwen3-moe-30b-a3b").moe_top_k == 8
+    assert get_config("recurrentgemma-2b").attn_window == 2048
+
+
+def test_param_counts_plausible():
+    expect = {"smollm-360m": (0.30e9, 0.50e9),
+              "llama3-8b": (7.5e9, 8.6e9),
+              "rwkv6-7b": (6.5e9, 8.4e9),
+              "chatglm3-6b": (5.5e9, 7.0e9),
+              "nemotron-4-15b": (14e9, 17e9),
+              "recurrentgemma-2b": (2.3e9, 3.2e9),
+              "qwen3-moe-30b-a3b": (28e9, 33e9),
+              "llama4-maverick-400b-a17b": (360e9, 430e9),
+              "llava-next-34b": (32e9, 37e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    a = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert 12e9 <= a <= 20e9, a
+    a3 = get_config("qwen3-moe-30b-a3b").active_param_count()
+    assert 2e9 <= a3 <= 4.5e9, a3
+
+
+def test_moe_capacity_vs_dense_no_drop():
+    cfg = get_reduced("qwen3-moe-30b-a3b").replace(
+        compute_dtype="float32", moe_capacity_factor=8.0)
+    params = lm.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    l1, aux1 = lm.lm_logits(params, batch, cfg)
+    l2, _ = lm.lm_logits(params, batch, cfg.replace(moe_impl="dense"))
+    assert float(jnp.abs(l1 - l2).max()) < 1e-4
+
+
+def test_moe_drop_frac_reported():
+    cfg = get_reduced("qwen3-moe-30b-a3b").replace(moe_capacity_factor=0.25)
+    params = lm.init_lm(KEY, cfg)
+    loss, metrics = lm.lm_loss(params, make_batch(cfg), cfg)
+    assert float(metrics["moe_drop_frac"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "rwkv6-7b", "recurrentgemma-2b"])
+def test_pallas_interpret_matches_xla(arch):
+    cfg = get_reduced(arch).replace(compute_dtype="float32")
+    params = lm.init_lm(KEY, cfg)
+    batch = make_batch(cfg, 2, 24, key=jax.random.PRNGKey(5))
+    l1, _ = lm.lm_logits(params, batch, cfg)
+    l2, _ = lm.lm_logits(params, batch, cfg.replace(
+        attn_impl="pallas_interpret", ssm_impl="pallas_interpret"))
+    assert float(jnp.abs(l1 - l2).max()) < 5e-4
+
+
+def test_chunked_attention_value_and_grad():
+    cfg = get_reduced("llama3-8b").replace(compute_dtype="float32")
+    params = lm.init_lm(KEY, cfg)
+    batch = make_batch(cfg, 2, 32, key=jax.random.PRNGKey(6))
+    f1 = lambda p: lm.lm_loss(p, batch, cfg)[0]
+    f2 = lambda p: lm.lm_loss(p, batch, cfg.replace(attn_impl="xla_chunked"))[0]
+    l1, g1 = jax.value_and_grad(f1)(params)
+    l2, g2 = jax.value_and_grad(f2)(params)
+    assert abs(float(l1 - l2)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        assert float(jnp.abs(a - b).max()) < 1e-5
+
+
+def test_ce_chunks_equivalence():
+    cfg = get_reduced("llama3-8b").replace(compute_dtype="float32")
+    params = lm.init_lm(KEY, cfg)
+    batch = make_batch(cfg, 2, 32, key=jax.random.PRNGKey(8))
+    l1, _ = lm.lm_loss(params, batch, cfg)
+    l2, _ = lm.lm_loss(params, batch, cfg.replace(ce_chunks=4))
+    assert abs(float(l1 - l2)) < 1e-5
+
+
+def test_long_500k_applicability_rules():
+    ok, _ = shape_applicable(get_config("rwkv6-7b"), SHAPES_BY_NAME["long_500k"])
+    assert ok
+    ok, why = shape_applicable(get_config("llama3-8b"),
+                               SHAPES_BY_NAME["long_500k"])
+    assert not ok and "full-attention" in why
+    ok, _ = shape_applicable(get_config("recurrentgemma-2b"),
+                             SHAPES_BY_NAME["long_500k"])
+    assert ok

@@ -1,0 +1,202 @@
+"""Protocol decision-logic tests (pure, no devices) + coordinator loop with
+instant fake payloads + checkpoint/restart of coordinator state."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
+                        ResourceRequest, Task, TaskState, fitness)
+from repro.runtime import AsyncExecutor, DeviceAllocator
+
+
+def proto(adaptive=True, **kw):
+    kw.setdefault("n_candidates", 4)
+    kw.setdefault("n_cycles", 3)
+    kw.setdefault("gen_devices", 1)
+    kw.setdefault("predict_devices", 1)
+    return ImpressProtocol(ProtocolConfig(adaptive=adaptive, **kw))
+
+
+def new_pl(p, name="X"):
+    return p.new_pipeline(name, np.zeros((30, 16), np.float32),
+                          np.zeros(16, np.float32), 24,
+                          np.arange(1, 7, dtype=np.int32))
+
+
+def gen_result(n=4, ll=None):
+    seqs = np.tile(np.arange(24, dtype=np.int32), (n, 1))
+    lls = np.asarray(ll if ll is not None else -np.arange(n, dtype=np.float32))
+    return seqs, lls
+
+
+METRIC_GOOD = {"plddt": 80.0, "ptm": 0.8, "pae": 8.0}
+METRIC_BAD = {"plddt": 40.0, "ptm": 0.4, "pae": 20.0}
+
+
+def test_generate_ranks_by_ll_when_adaptive():
+    p = proto(adaptive=True)
+    pl = new_pl(p)
+    tasks = p.on_generate_done(pl, gen_result(ll=[-3.0, -1.0, -2.0, -4.0]))
+    assert len(tasks) == 1 and tasks[0].kind == "predict"
+    _, lls = pl.meta["candidates"]
+    assert list(lls) == sorted(lls, reverse=True)
+
+
+def test_first_predict_always_accepts_then_requires_improvement():
+    p = proto()
+    pl = new_pl(p)
+    p.on_generate_done(pl, gen_result())
+    out = p.on_predict_done(pl, METRIC_BAD)
+    assert out["event"] == "accepted" and pl.cycle == 1
+    p.on_generate_done(pl, gen_result())
+    out = p.on_predict_done(pl, METRIC_BAD)  # same fitness -> declined
+    assert out["event"] == "reselect"
+    out = p.on_predict_done(pl, METRIC_GOOD)
+    assert out["event"] == "accepted" and pl.cycle == 2
+
+
+def test_prune_after_exhausting_candidates():
+    p = proto(n_candidates=3, max_reselections=10)
+    pl = new_pl(p)
+    p.on_generate_done(pl, gen_result(3))
+    p.on_predict_done(pl, METRIC_GOOD)     # cycle 0 accepted (high bar)
+    p.on_generate_done(pl, gen_result(3))
+    events = [p.on_predict_done(pl, METRIC_BAD)["event"] for _ in range(3)]
+    assert events == ["reselect", "reselect", "pruned"]
+    assert not pl.active
+
+
+def test_max_reselections_bound():
+    p = proto(n_candidates=40, max_reselections=2)
+    pl = new_pl(p)
+    p.on_generate_done(pl, gen_result(40))
+    p.on_predict_done(pl, METRIC_GOOD)
+    p.on_generate_done(pl, gen_result(40))
+    ev = [p.on_predict_done(pl, METRIC_BAD)["event"] for _ in range(3)]
+    assert ev == ["reselect", "reselect", "pruned"]
+
+
+def test_control_always_accepts_and_never_spawns():
+    p = proto(adaptive=False)
+    pl = new_pl(p)
+    for cycle in range(3):
+        p.on_generate_done(pl, gen_result())
+        out = p.on_predict_done(pl, METRIC_BAD)
+        assert out["spawn"] is None
+        assert out["event"] in ("accepted", "completed")
+    assert not pl.active and len(pl.history) == 3
+
+
+def test_sub_pipeline_spawn_on_close_runner_up():
+    p = proto(runner_up_window=100.0, max_sub_pipelines=8)
+    pl = new_pl(p)
+    p.on_generate_done(pl, gen_result())
+    out = p.on_predict_done(pl, METRIC_GOOD)
+    assert out["spawn"] is not None
+    sub = p.new_pipeline(out["spawn"]["name"], out["spawn"]["backbone"],
+                         out["spawn"]["target"], out["spawn"]["receptor_len"],
+                         out["spawn"]["peptide_tokens"],
+                         parent=out["spawn"]["parent"],
+                         seed_candidate=out["spawn"]["seed_candidate"])
+    assert sub.is_sub_pipeline
+    t = p.first_task(sub)
+    assert t.kind == "predict"  # jumps straight to stage 4
+
+
+def test_structure_update_drifts_receptor_only():
+    p = proto()
+    pl = new_pl(p)
+    before = pl.meta["backbone"].copy()
+    p.on_generate_done(pl, gen_result())
+    p.on_predict_done(pl, METRIC_GOOD)
+    after = pl.meta["backbone"]
+    assert not np.allclose(before[:24], after[:24])
+    np.testing.assert_array_equal(before[24:], after[24:])
+
+
+def test_fitness_direction():
+    assert fitness(METRIC_GOOD) > fitness(METRIC_BAD)
+
+
+# ---------------------------------------------------------------------------
+# coordinator with instant fake payloads
+# ---------------------------------------------------------------------------
+
+class FakePayload:
+    """Deterministic instant payloads: predict quality improves with the
+    mean structure feature, so adaptive runs hill-climb."""
+
+    def __init__(self):
+        self.rng = np.random.default_rng(0)
+        self.n_gen = 0
+        self.n_pred = 0
+
+    def generate(self, submesh, payload):
+        self.n_gen += 1
+        n, L = payload["n"], payload["length"]
+        seqs = self.rng.integers(1, 21, size=(n, L)).astype(np.int32)
+        lls = -self.rng.random(n).astype(np.float32)
+        return seqs, lls
+
+    def predict(self, submesh, payload):
+        self.n_pred += 1
+        s = float(np.mean(payload["sequence"])) + self.rng.normal(0, 2.0)
+        return {"plddt": 50 + s, "ptm": 0.5, "pae": 15.0}
+
+
+def run_coordinator(adaptive, n_struct=2, cycles=2):
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    fp = FakePayload()
+    ex.register("generate", fp.generate)
+    ex.register("predict", fp.predict)
+    p = proto(adaptive=adaptive, n_cycles=cycles, max_sub_pipelines=2)
+    coord = Coordinator(ex, p, max_inflight=None if adaptive else 1)
+    for i in range(n_struct):
+        coord.add_pipeline(new_pl(p, f"S{i}"))
+    rep = coord.run(timeout=60)
+    ex.shutdown()
+    return rep, fp
+
+
+def test_coordinator_all_pipelines_terminate():
+    rep, fp = run_coordinator(adaptive=True)
+    assert rep["n_pipelines"] == 2
+    assert rep["trajectories"] == fp.n_pred
+    assert rep["executor"]["n_failed"] == 0
+
+
+def test_adaptive_explores_at_least_as_many_trajectories_as_control():
+    rep_c, _ = run_coordinator(adaptive=False)
+    rep_a, _ = run_coordinator(adaptive=True)
+    assert rep_a["trajectories"] >= rep_c["trajectories"]
+    assert rep_c["n_sub_pipelines"] == 0
+
+
+def test_coordinator_state_roundtrip():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    fp = FakePayload()
+    ex.register("generate", fp.generate)
+    ex.register("predict", fp.predict)
+    p = proto(n_cycles=2)
+    coord = Coordinator(ex, p, max_inflight=None)
+    coord.add_pipeline(new_pl(p, "A"))
+    coord.run(timeout=30)
+    state = coord.state_dict()
+    ex.shutdown()
+
+    # restore into a fresh coordinator: pipelines come back, completed ones
+    # stay inactive
+    alloc2 = DeviceAllocator(jax.devices())
+    ex2 = AsyncExecutor(alloc2, max_workers=1)
+    ex2.register("generate", fp.generate)
+    ex2.register("predict", fp.predict)
+    coord2 = Coordinator(ex2, proto(n_cycles=2), max_inflight=None)
+    coord2.load_state_dict(state)
+    assert len(coord2.pipelines) == len(state["pipelines"])
+    names = {pl.name for pl in coord2.pipelines.values()}
+    assert "A" in names
+    ex2.shutdown()

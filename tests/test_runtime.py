@@ -1,0 +1,226 @@
+"""Runtime tests: allocator invariants (hypothesis), scheduler backfill,
+executor lifecycle / retry / failure injection."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import ResourceRequest, Task, TaskState
+from repro.runtime import AsyncExecutor, DeviceAllocator, TaskQueue
+from repro.runtime.allocator import _block_shapes
+
+
+class FakeDev:
+    """Stands in for a jax device in allocator-only tests."""
+    _n = 0
+
+    def __init__(self):
+        FakeDev._n += 1
+        self.id = FakeDev._n
+
+
+def fake_grid(*shape):
+    n = int(np.prod(shape))
+    return np.array([FakeDev() for _ in range(n)], dtype=object).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_carve_release_reuse():
+    alloc = DeviceAllocator(fake_grid(4, 4))
+    subs = [alloc.request(4) for _ in range(4)]
+    assert all(s is not None for s in subs)
+    assert alloc.n_free == 0
+    assert alloc.request(1) is None
+    alloc.release(subs[0])
+    assert alloc.n_free == 4
+    again = alloc.request(2)
+    assert again is not None
+
+
+def test_block_shapes_prefers_square():
+    shapes = _block_shapes(4, (4, 4))
+    assert shapes[0] == (2, 2)
+
+
+def test_failure_shrinks_pool_and_reports_hit():
+    grid = fake_grid(2, 2)
+    alloc = DeviceAllocator(grid)
+    sub = alloc.request(2)
+    dead = sub.devices.flat[0]
+    hit = alloc.mark_failed(dead)
+    assert [h.uid for h in hit] == [sub.uid]
+    alloc.release(sub)
+    assert alloc.healthy_devices == 3
+    assert alloc.n_free == 3  # dead device never returns to the pool
+    assert alloc.request(4) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 4]), min_size=1, max_size=12),
+       st.data())
+def test_allocator_conservation_invariant(sizes, data):
+    """Property: free + allocated == healthy devices, always; no double
+    allocation of a device."""
+    alloc = DeviceAllocator(fake_grid(4, 4))
+    live = []
+    for n in sizes:
+        action = data.draw(st.sampled_from(["alloc", "release"]))
+        if action == "release" and live:
+            alloc.release(live.pop(data.draw(
+                st.integers(0, len(live) - 1))))
+        else:
+            sub = alloc.request(n)
+            if sub is not None:
+                live.append(sub)
+        used = sum(s.n_devices for s in live)
+        assert alloc.n_free + used == alloc.healthy_devices
+        ids = [d.id for s in live for d in s.devices.flat]
+        assert len(ids) == len(set(ids))
+
+
+def test_utilization_accounting():
+    alloc = DeviceAllocator(fake_grid(2,))
+    sub = alloc.request(2)
+    time.sleep(0.05)
+    alloc.release(sub)
+    u = alloc.utilization()
+    assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_backfill_small_task_jumps_queue():
+    q = TaskQueue(backfill=True)
+    big = Task(kind="x", payload={}, resources=ResourceRequest(8), priority=0)
+    small = Task(kind="x", payload={}, resources=ResourceRequest(1), priority=5)
+    q.push(big)
+    q.push(small)
+    got = q.pop_fitting(lambda n: n <= 2)
+    assert got.uid == small.uid
+    q2 = TaskQueue(backfill=False)
+    q2.push(Task(kind="x", payload={}, resources=ResourceRequest(8)))
+    q2.push(Task(kind="x", payload={}, resources=ResourceRequest(1)))
+    assert q2.pop_fitting(lambda n: n <= 2) is None
+
+
+def test_priority_order():
+    q = TaskQueue()
+    t1 = Task(kind="x", payload={}, priority=5)
+    t2 = Task(kind="x", payload={}, priority=1)
+    q.push(t1)
+    q.push(t2)
+    assert q.pop_fitting(lambda n: True).uid == t2.uid
+
+
+# ---------------------------------------------------------------------------
+# executor (real jax device)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def executor():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2, max_retries=2)
+    yield ex
+    ex.shutdown()
+
+
+def test_executor_lifecycle_and_states(executor):
+    def fn(submesh, payload):
+        return payload["x"] + 1
+
+    executor.register("inc", fn)
+    t = Task(kind="inc", payload={"x": 41}, resources=ResourceRequest(1))
+    executor.submit(t)
+    done = executor.drain(timeout=10)
+    assert done.result == 42 and done.state == TaskState.DONE
+    for s in ("QUEUED", "SCHEDULED", "EXEC_SETUP", "RUNNING", "DONE"):
+        assert s in done.timestamps
+
+
+def test_executor_retries_then_succeeds(executor):
+    calls = {"n": 0}
+
+    def flaky(submesh, payload):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    executor.register("flaky", flaky)
+    executor.submit(Task(kind="flaky", payload={}))
+    done = executor.drain(timeout=10)
+    assert done.state == TaskState.DONE and done.retries == 2
+
+
+def test_executor_fails_after_max_retries(executor):
+    def always(submesh, payload):
+        raise ValueError("nope")
+
+    executor.register("bad", always)
+    executor.submit(Task(kind="bad", payload={}))
+    done = executor.drain(timeout=10)
+    assert done.state == TaskState.FAILED
+    assert "nope" in done.error
+
+
+def test_cancel_queued_task(executor):
+    import threading
+    gate = threading.Event()
+
+    def slow(submesh, payload):
+        gate.wait(timeout=5)
+        return 1
+
+    executor.register("slow", slow)
+    t1 = Task(kind="slow", payload={})
+    t2 = Task(kind="slow", payload={})  # queued behind t1 (1 device total)
+    executor.submit(t1)
+    time.sleep(0.1)
+    executor.submit(t2)
+    executor.cancel(t2.uid)
+    gate.set()
+    states = {executor.drain(timeout=10).state for _ in range(2)}
+    assert TaskState.CANCELED in states and TaskState.DONE in states
+
+
+def test_device_failure_injection_requeues():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2, max_retries=2)
+    import threading
+    started = threading.Event()
+
+    def fn(submesh, payload):
+        started.set()
+        for _ in range(200):
+            if payload_task[0].canceled:
+                raise RuntimeError("killed by failure")
+            time.sleep(0.01)
+        return "finished"
+
+    ex.register("work", fn)
+    t = Task(kind="work", payload={})
+    payload_task = [t]
+    ex.submit(t)
+    started.wait(timeout=5)
+    requeued = ex.inject_device_failure(jax.devices()[0])
+    # the whole (1-device) pool is dead: the clone can never run
+    assert len(requeued) == 1
+    assert alloc.healthy_devices == 0
+    ex.shutdown()
+
+
+def test_stats_fields(executor):
+    executor.register("inc", lambda sm, p: 1)
+    executor.submit(Task(kind="inc", payload={}))
+    executor.drain(timeout=10)
+    s = executor.stats()
+    assert s["n_done"] == 1 and s["n_tasks"] == 1
+    assert 0 <= s["utilization"] <= 1.0

@@ -1,0 +1,171 @@
+"""Optimizer / schedules / data pipeline / checkpointing tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.configs import get_reduced
+from repro.data import Prefetcher, lm_batch, protein_design_tasks
+from repro.models import lm
+from repro.optim import (OptConfig, adamw_update, clip_by_global_norm,
+                         global_norm, init_opt_state, make_schedule,
+                         make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                    schedule="constant", weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, opt)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, state = adamw_update(g, state, params, opt, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+    small = {"a": jnp.full((4,), 0.01), "b": jnp.full((3,), 0.01)}
+    c2, _ = clip_by_global_norm(small, 1.0)
+    assert float(jnp.abs(c2["a"] - small["a"]).max()) < 1e-7
+
+
+def test_schedule_shapes():
+    opt = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    schedule="cosine", min_lr_frac=0.1)
+    s = make_schedule(opt)
+    assert float(s(jnp.array(0))) < 1e-3 / 5
+    assert abs(float(s(jnp.array(10))) - 1e-3) < 1e-4
+    assert float(s(jnp.array(100))) <= 1.05e-4 + 1e-9
+
+
+def test_bf16_moments():
+    opt = OptConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    state = init_opt_state(params, opt)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_microbatch_grad_accumulation_matches_full_batch():
+    cfg = get_reduced("smollm-360m").replace(compute_dtype="float32")
+    params = lm.init_lm(KEY, cfg)
+    batch = {"inputs": jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size),
+             "targets": jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size)}
+    p1 = make_train_step(cfg, OptConfig(microbatches=1, clip_norm=1e9))(
+        params, init_opt_state(params, OptConfig()), batch)[0]
+    p2 = make_train_step(cfg, OptConfig(microbatches=4, clip_norm=1e9))(
+        params, init_opt_state(params, OptConfig()), batch)[0]
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_host_sharding():
+    cfg = get_reduced("smollm-360m")
+    b1 = lm_batch(cfg, 8, 16, seed=1, step=3, host=0, n_hosts=2)
+    b2 = lm_batch(cfg, 8, 16, seed=1, step=3, host=0, n_hosts=2)
+    b3 = lm_batch(cfg, 8, 16, seed=1, step=3, host=1, n_hosts=2)
+    assert bool(jnp.all(b1["inputs"] == b2["inputs"]))
+    assert not bool(jnp.all(b1["inputs"] == b3["inputs"]))
+    assert b1["inputs"].shape == (4, 16)  # local shard
+    assert int(b1["inputs"].max()) < cfg.vocab_size
+    # targets are inputs shifted by one
+    assert bool(jnp.all(b1["targets"][:, :-1] == b1["inputs"][:, 1:]))
+
+
+def test_prefetcher_order_and_close():
+    it = iter(range(10))
+    pf = Prefetcher(it, depth=3)
+    got = [next(pf) for _ in range(10)]
+    assert got == list(range(10))
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+
+
+def test_protein_tasks():
+    tasks = protein_design_tasks(6, receptor_len=20, peptide_len=5)
+    assert tasks[0]["name"] == "NHERF3" and len(tasks) == 6
+    assert tasks[0]["backbone"].shape == (25, 16)
+    assert tasks[0]["peptide_tokens"].shape == (5,)
+    # same fixed target peptide across tasks
+    assert np.array_equal(tasks[0]["peptide_tokens"], tasks[3]["peptide_tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_pytree_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [jnp.ones(4), {"c": jnp.zeros((2, 2), jnp.int32)}]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_pytree(tree, path, step=5)
+        out = load_pytree(tree, path)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        assert bool(jnp.all(x == y))
+
+
+def test_manager_gc_latest_and_restore():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_write=False)
+        state = {"w": jnp.ones((3,)), "step": jnp.zeros(())}
+        for s in (1, 2, 3):
+            mgr.save(s, jax.tree.map(lambda x: x + s, state),
+                     extra={"s": s}, block=True)
+        assert mgr.all_steps() == [2, 3]
+        assert mgr.latest_step() == 3
+        restored, extra, step = mgr.restore(state)
+        assert step == 3 and extra == {"s": 3}
+        assert float(restored["w"][0]) == 4.0
+
+
+def test_train_checkpoint_resume_continues_identically():
+    cfg = get_reduced("smollm-360m").replace(compute_dtype="float32")
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    params = lm.init_lm(KEY, cfg)
+    state = init_opt_state(params, opt)
+
+    def batch(i):
+        return lm_batch(cfg, 4, 16, seed=0, step=i)
+
+    # run 6 steps straight
+    p1, s1 = params, state
+    for i in range(6):
+        p1, s1, _ = step_fn(p1, s1, batch(i))
+    # run 3, checkpoint, restore, run 3 more
+    p2, s2 = params, state
+    for i in range(3):
+        p2, s2, _ = step_fn(p2, s2, batch(i))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        mgr.save(3, {"params": p2, "opt": s2}, block=True)
+        restored, _, _ = mgr.restore({"params": p2, "opt": s2})
+    p3, s3 = restored["params"], restored["opt"]
+    for i in range(3, 6):
+        p3, s3, _ = step_fn(p3, s3, batch(i))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-6, rtol=1e-5)
