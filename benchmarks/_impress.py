@@ -24,7 +24,8 @@ from repro.runtime import AsyncExecutor, DeviceAllocator
 
 def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,
                 n_candidates=6, receptor_len=24, seed=0,
-                max_sub_pipelines=8, reduced=True, timeout=900.0):
+                max_sub_pipelines=8, reduced=True, timeout=900.0,
+                score_batch=0):
     tasks = protein_design_tasks(n_structures, receptor_len=receptor_len,
                                  peptide_len=6, seed=seed)
     alloc = DeviceAllocator(jax.devices())
@@ -38,7 +39,8 @@ def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,
     pc = ProtocolConfig(
         n_candidates=n_candidates, n_cycles=n_cycles, adaptive=adaptive,
         gen_devices=min(2, len(jax.devices())), predict_devices=1,
-        max_sub_pipelines=max_sub_pipelines if adaptive else 0, seed=seed)
+        max_sub_pipelines=max_sub_pipelines if adaptive else 0, seed=seed,
+        score_batch=score_batch)
     proto = ImpressProtocol(pc)
     coord = Coordinator(ex, proto, max_inflight=None if adaptive else 1)
     for t in tasks:

@@ -39,6 +39,7 @@ class Coordinator:
         self._parked_spawns: List[dict] = []
         self.events: List[dict] = []
         self._done_task_uids: set = set()
+        self._occupancy: List[float] = []   # predict_batch bucket occupancy
 
     # -- submission channel ------------------------------------------------
 
@@ -101,8 +102,16 @@ class Coordinator:
             if task.speculative_of in self._done_task_uids \
                     or task.state != TaskState.DONE:
                 return
+            # the duplicate won: the original (cancel is cooperative) will
+            # still surface later as DONE — mark it handled now so the
+            # pipeline doesn't double-advance
+            self._done_task_uids.add(task.speculative_of)
             orig_pl = self.pipelines.get(task.pipeline_id)
             pl = orig_pl if orig_pl is not None else pl
+        if task.uid in self._done_task_uids:
+            # already handled via a winning speculative duplicate — even a
+            # late FAILED/CANCELED original must not touch the pipeline
+            return
         if task.state in (TaskState.FAILED, TaskState.CANCELED):
             self.events.append({"t": time.monotonic(),
                                 "event": task.state.value,
@@ -117,10 +126,21 @@ class Coordinator:
             for t in self.protocol.on_generate_done(pl, task.result):
                 t.pipeline_id = pl.uid
                 self._enqueue(t)
-        elif task.kind == "predict":
-            out = self.protocol.on_predict_done(pl, task.result)
-            self.events.append({"t": time.monotonic(), "event": out["event"],
-                                "pipeline": pl.name, "cycle": pl.cycle})
+        elif task.kind in ("predict", "predict_batch"):
+            if task.kind == "predict_batch":
+                out = self.protocol.on_predict_batch_done(pl, task.result)
+                b = (task.result or {}).get("batch") \
+                    if isinstance(task.result, dict) else None
+                if b and b.get("leader", True):
+                    self._occupancy.append(float(b["occupancy"]))
+            else:
+                out = self.protocol.on_predict_done(pl, task.result)
+            for ev in out.get("events",
+                              [{"event": out["event"], "cycle": pl.cycle}]):
+                self.events.append({"t": time.monotonic(),
+                                    "event": ev["event"],
+                                    "pipeline": pl.name,
+                                    "cycle": ev["cycle"]})
             for t in out["tasks"]:
                 t.pipeline_id = pl.uid
                 self._enqueue(t)
@@ -176,6 +196,9 @@ class Coordinator:
             "makespan_s": makespan,
             "utilization": self.executor.allocator.utilization(),
             "executor": self.executor.stats(),
+            "batch_occupancy": (float(np.mean(self._occupancy))
+                                if self._occupancy else None),
+            "n_score_batches": len(self._occupancy),
             "cycles": cycles,
             "events": self.events,
         }

@@ -16,16 +16,35 @@ from __future__ import annotations
 import threading
 import time
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.models import protein as prot
 
 compile_log: Dict[str, list] = {"generate": [], "predict": []}
+
+# One record per predict_batch device dispatch: real rows vs padded bucket
+# rows and device fan-out — the occupancy numbers behind report()/benchmarks.
+batch_log: List[dict] = []
+
+# Batch-dim buckets predict_batch pads to. A small fixed set keeps the
+# jit-cache bounded: every (rows, length) lands on one of
+# len(BATCH_BUCKETS) × |lengths| compiled executables.
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_rows(n: int) -> int:
+    """Smallest bucket >= n (next power of two above the largest bucket)."""
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    b = BATCH_BUCKETS[-1]
+    while b < n:
+        b *= 2
+    return b
 
 
 class ProteinPayload:
@@ -113,14 +132,114 @@ class ProteinPayload:
         return {"plddt": float(m.plddt[0]), "ptm": float(m.ptm[0]),
                 "pae": float(m.pae[0])}
 
+    def predict_batch(self, submesh, payload):
+        """Score a stack of sequences in one vectorized call per device.
+
+        payload: sequences (R, L) i32; target (16,) shared or (R, 16)
+        per-row; receptor_len int. The batch dim is padded up to a
+        ``BATCH_BUCKETS`` size (pad rows repeat the last real row, are
+        dropped before returning, and cannot perturb real rows —
+        ``foldscore_fwd`` has no cross-batch mixing) and the padded stack is
+        split evenly across the sub-mesh's devices, so large batches run as
+        wide as the allocation allows instead of pinning to one device.
+
+        Returns {"rows": [per-row metric dicts], "batch": occupancy info}.
+        """
+        seqs = np.asarray(payload["sequences"], np.int32)
+        if seqs.ndim == 1:
+            seqs = seqs[None]
+        R, L = seqs.shape
+        tgt = np.asarray(payload["target"], np.float32)
+        if tgt.ndim == 1:
+            tgt = np.tile(tgt[None], (R, 1))
+        split = int(payload["receptor_len"])
+        B = bucket_rows(R)
+        if B > R:
+            seqs = np.concatenate([seqs, np.repeat(seqs[-1:], B - R, 0)])
+            tgt = np.concatenate([tgt, np.repeat(tgt[-1:], B - R, 0)])
+        devices = list(submesh.devices.flat)
+        ndev = min(len(devices), B)
+        while B % ndev:
+            ndev -= 1
+        per = B // ndev
+        futures = []
+        for i in range(ndev):
+            dev = devices[i]
+            fn = self._compiled(
+                f"predict_b{per}_L{L}_{split}", dev,
+                lambda: jax.jit(partial(prot.foldscore_fwd, cfg=self.fold_cfg,
+                                        chain_split=split)))
+            fp = self._params_on("fold", self.fold_params, dev)
+            s = jax.device_put(seqs[i * per:(i + 1) * per], dev)
+            t = jax.device_put(tgt[i * per:(i + 1) * per], dev)
+            futures.append(fn(fp, s, t))
+        m = prot.FoldMetrics(
+            plddt=np.concatenate([np.asarray(f.plddt) for f in futures]),
+            ptm=np.concatenate([np.asarray(f.ptm) for f in futures]),
+            pae=np.concatenate([np.asarray(f.pae) for f in futures]))
+        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev}
+        batch_log.append(batch)
+        return {"rows": prot.metrics_rows(m, R), "batch": dict(batch)}
+
     def register_all(self, executor):
         executor.register("generate", self.generate)
         executor.register("predict", self.predict)
+        executor.register("predict_batch", self.predict_batch)
+        if hasattr(executor, "register_coalescable"):
+            executor.register_coalescable("predict_batch",
+                                          predict_batch_coalesce_rule())
+
+
+def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
+    """Coalescing contract for ``predict_batch`` tasks: queued tasks from
+    *different* pipelines with the same (sequence length, chain split) fuse
+    into one device batch — per-row targets keep each pipeline's context —
+    and results fan back out row-slice by row-slice."""
+    from repro.runtime.executor import CoalesceRule
+
+    def n_rows(task):
+        s = np.asarray(task.payload["sequences"])
+        return 1 if s.ndim == 1 else int(s.shape[0])
+
+    def key(task):
+        s = np.asarray(task.payload["sequences"])
+        return (int(s.shape[-1]), int(task.payload["receptor_len"]))
+
+    def merge(tasks):
+        seq_stacks, tgt_stacks = [], []
+        for t in tasks:
+            s = np.asarray(t.payload["sequences"], np.int32)
+            if s.ndim == 1:
+                s = s[None]
+            g = np.asarray(t.payload["target"], np.float32)
+            if g.ndim == 1:
+                g = np.tile(g[None], (s.shape[0], 1))
+            seq_stacks.append(s)
+            tgt_stacks.append(g)
+        return {"sequences": np.concatenate(seq_stacks),
+                "target": np.concatenate(tgt_stacks),
+                "receptor_len": tasks[0].payload["receptor_len"]}
+
+    def split(tasks, result):
+        rows = result["rows"]
+        info = result.get("batch", {})
+        outs, at = [], 0
+        for i, t in enumerate(tasks):
+            k = n_rows(t)
+            outs.append({"rows": rows[at:at + k],
+                         "batch": dict(info, fused=len(tasks),
+                                       leader=(i == 0))})
+            at += k
+        return outs
+
+    return CoalesceRule(key=key, merge=merge, split=split, rows=n_rows,
+                        max_rows=max_rows)
 
 
 def clear_compile_log():
     for v in compile_log.values():
         v.clear()
+    batch_log.clear()
 
 
 def _ll_loss(params, backbone, seqs, weights, cfg):

@@ -19,6 +19,15 @@ protocol proposes a sub-pipeline exploring it as an alternative conformation
 The CONT-V control drops every adaptive element: random candidate choice,
 unconditional accept, no re-selection, no pruning, no sub-pipelines
 (paper §III-A).
+
+Batched scoring (``score_batch >= 1``): instead of one candidate per
+protocol⇄executor round-trip, the top-k ranked candidates are submitted as a
+single ``predict_batch`` task and the stage-6 decision walks the returned
+score rows in LL order, applying exactly the per-candidate accept /
+re-select / prune rules — up to ``max_reselections`` round-trips collapse
+into one. With k=1 the batched path reproduces the sequential event sequence
+bit-for-bit (tests/test_batched_scoring.py); the CONT-V control is clamped
+to k=1. ``score_batch=0`` (default) keeps the seed per-candidate tasks.
 """
 
 from __future__ import annotations
@@ -47,6 +56,8 @@ class ProtocolConfig:
     gen_devices: int = 2
     predict_devices: int = 1
     seed: int = 0
+    score_batch: int = 0  # 0: per-candidate predict tasks (sequential seed
+    #                       path); k>=1: top-k batched predict_batch tasks
 
 
 def fitness(metrics: Dict[str, float]) -> float:
@@ -92,7 +103,7 @@ class ImpressProtocol:
 
     def first_task(self, pl: Pipeline) -> Task:
         if pl.meta["candidates"] is not None:   # sub-pipeline: jump to stage 4
-            return self._predict_task(pl)
+            return self._next_predict_task(pl)
         return self._generate_task(pl)
 
     # -- task builders -----------------------------------------------------
@@ -120,6 +131,36 @@ class ImpressProtocol:
             "receptor_len": pl.meta["receptor_len"],
         }, resources=ResourceRequest(n_devices=self.cfg.predict_devices))
 
+    def _batch_k(self, pl: Pipeline) -> int:
+        """Rows for the next predict_batch: the configured top-k, capped by
+        the candidates left and the remaining re-selection budget (scoring
+        past the prune point would be pure waste). CONT-V accepts the first
+        candidate unconditionally, so the control stays k=1 sequential."""
+        c = self.cfg
+        if not c.adaptive:
+            return 1
+        seqs, _ = pl.meta["candidates"]
+        left = len(seqs) - pl.meta["cand_idx"]
+        budget = c.max_reselections - pl.meta["reselections"] + 1
+        return max(1, min(c.score_batch, left, budget))
+
+    def _predict_batch_task(self, pl: Pipeline) -> Task:
+        seqs, lls = pl.meta["candidates"]
+        i = pl.meta["cand_idx"]
+        k = self._batch_k(pl)
+        pep = pl.meta["peptide_tokens"]
+        stack = np.stack([np.concatenate(
+            [np.asarray(seqs[i + r], np.int32), pep]) for r in range(k)])
+        return Task(kind="predict_batch", pipeline_id=pl.uid, payload={
+            "sequences": stack,
+            "target": pl.meta["target"],
+            "receptor_len": pl.meta["receptor_len"],
+        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices))
+
+    def _next_predict_task(self, pl: Pipeline) -> Task:
+        return (self._predict_batch_task(pl) if self.cfg.score_batch >= 1
+                else self._predict_task(pl))
+
     # -- completions ---------------------------------------------------------
 
     def on_generate_done(self, pl: Pipeline, result) -> List[Task]:
@@ -131,13 +172,49 @@ class ImpressProtocol:
         pl.meta["candidates"] = (np.asarray(seqs)[order], np.asarray(lls)[order])
         pl.meta["cand_idx"] = 0
         pl.meta["reselections"] = 0
-        return [self._predict_task(pl)]
+        return [self._next_predict_task(pl)]
 
     def on_predict_done(self, pl: Pipeline, metrics: Dict[str, float]
                         ) -> Dict[str, Any]:
-        """Stage 6 decision. Returns dict with keys:
+        """Stage 6 decision for one scored candidate. Returns dict with keys:
         tasks: List[Task]; spawn: Optional[sub-pipeline proposal];
-        event: accepted | reselect | pruned | completed."""
+        event: accepted | reselect | pruned | completed;
+        events: [{event, cycle}] (the post-decision cycle)."""
+        out = self._decide(pl, metrics)
+        if out["event"] == "reselect":
+            out["tasks"] = [self._predict_task(pl)]
+        out["events"] = [{"event": out["event"], "cycle": pl.cycle}]
+        return out
+
+    def on_predict_batch_done(self, pl: Pipeline, result) -> Dict[str, Any]:
+        """Stage 6 decision over a batched top-k score vector: walk the rows
+        in LL order applying the per-candidate rules until one is accepted
+        (later rows are discarded speculation) or the batch is exhausted —
+        then the next top-k batch is submitted. ``events`` carries the
+        per-row event sequence; ``event`` the last one."""
+        rows = result["rows"] if isinstance(result, dict) else list(result)
+        if not rows:
+            raise ValueError("predict_batch completed with no score rows")
+        events: List[dict] = []
+        out: Dict[str, Any] = {}
+        for metrics in rows:
+            out = self._decide(pl, metrics)
+            # stamp each row with its own post-decision cycle, exactly as
+            # the sequential path would have logged it
+            events.append({"event": out["event"], "cycle": pl.cycle})
+            if out["event"] != "reselect":
+                break
+        if out.get("event") == "reselect":  # batch exhausted, budget left
+            out["tasks"] = [self._predict_batch_task(pl)]
+        out["events"] = events
+        return out
+
+    def _decide(self, pl: Pipeline, metrics: Dict[str, float]
+                ) -> Dict[str, Any]:
+        """The per-candidate accept / re-select / prune rule — shared by the
+        sequential and batched paths so both make identical decisions.
+        'reselect' outcomes return ``tasks=[]``; the caller decides whether
+        the next candidate costs a round-trip or is the next batch row."""
         c = self.cfg
         pl.meta["trajectories"] += 1
         fit = fitness(metrics)
@@ -150,8 +227,7 @@ class ImpressProtocol:
             seqs, _ = pl.meta["candidates"]
             if (pl.meta["reselections"] <= c.max_reselections
                     and pl.meta["cand_idx"] < len(seqs)):
-                return {"tasks": [self._predict_task(pl)], "spawn": None,
-                        "event": "reselect"}
+                return {"tasks": [], "spawn": None, "event": "reselect"}
             pl.active = False
             return {"tasks": [], "spawn": None, "event": "pruned"}
 

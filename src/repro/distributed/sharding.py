@@ -86,7 +86,7 @@ def resolve_logical(logical, shape, mesh, cfg):
         fit = _fit(dim, axes, mesh)
         if fit is None and name == "expert_group_all":
             fit = _fit(dim, dp_axes(mesh), mesh)  # fall back to dp-only
-        spec.append(fit[0] if fit and len(fit) == 1 else fit)
+        spec.append(fit)  # always a tuple (or None): P entries compare stably
     return P(*spec)
 
 

@@ -32,6 +32,18 @@ class FoldMetrics(NamedTuple):
     pae: jax.Array     # (B,) inter-chain mean pAE, 0..30 (lower better)
 
 
+def metrics_rows(m: FoldMetrics, n: int | None = None) -> list:
+    """Materialize batched FoldMetrics as one host-side dict per row (the
+    per-candidate contract of the protocol layer). ``n`` truncates padded
+    bucket rows."""
+    plddt = np.asarray(m.plddt, np.float32)
+    ptm = np.asarray(m.ptm, np.float32)
+    pae = np.asarray(m.pae, np.float32)
+    n = plddt.shape[0] if n is None else n
+    return [{"plddt": float(plddt[i]), "ptm": float(ptm[i]),
+             "pae": float(pae[i])} for i in range(n)]
+
+
 # ---------------------------------------------------------------------------
 # ProGen
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 from repro.runtime.allocator import DeviceAllocator, SubMesh
-from repro.runtime.executor import AsyncExecutor
+from repro.runtime.executor import AsyncExecutor, CoalesceRule
 from repro.runtime.scheduler import TaskQueue
 
-__all__ = ["DeviceAllocator", "SubMesh", "AsyncExecutor", "TaskQueue"]
+__all__ = ["DeviceAllocator", "SubMesh", "AsyncExecutor", "CoalesceRule",
+           "TaskQueue"]

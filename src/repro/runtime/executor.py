@@ -13,6 +13,14 @@ Fault tolerance: payload exceptions requeue the task up to ``max_retries``;
 tasks whose allocation it hit. Straggler mitigation: a watchdog duplicates
 tasks running longer than ``straggler_factor`` × the median duration of
 their kind when spare capacity exists; first finisher wins.
+
+Task coalescing: kinds registered via ``register_coalescable`` carry a
+``CoalesceRule``. When a worker dequeues such a task it also drains every
+*compatible* queued task (same ``rule.key``, typically same bucketed shape
+— they may come from different pipelines) up to ``rule.max_rows`` batch
+rows, runs the payload fn once on the merged payload, and fans the result
+back out so each member task completes independently. Queued work thus
+soaks spare batch capacity as rows instead of waiting for whole sub-meshes.
 """
 
 from __future__ import annotations
@@ -22,11 +30,25 @@ import statistics
 import threading
 import time
 import traceback
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.pipeline import TERMINAL, Task, TaskState
 from repro.runtime.allocator import DeviceAllocator, SubMesh
 from repro.runtime.scheduler import TaskQueue
+
+
+@dataclass(frozen=True)
+class CoalesceRule:
+    """How to fuse compatible queued tasks of one kind into a single
+    dispatch. ``key`` defines compatibility; ``merge`` builds the fused
+    payload from the member tasks; ``split`` maps the fused result back to
+    one result per member; ``rows`` is a member's batch-row footprint."""
+    key: Callable[[Task], Any]
+    merge: Callable[[List[Task]], dict]
+    split: Callable[[List[Task], Any], List[Any]]
+    rows: Callable[[Task], int]
+    max_rows: int = 64
 
 
 class AsyncExecutor:
@@ -41,6 +63,8 @@ class AsyncExecutor:
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
         self._fns: Dict[str, Callable[[SubMesh, dict], Any]] = {}
+        self._coalesce: Dict[str, CoalesceRule] = {}
+        self._coalesce_log: List[Tuple[int, int]] = []  # (n_tasks, n_rows)
         self._tasks: Dict[int, Task] = {}
         self._durations: Dict[str, List[float]] = {}
         self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
@@ -60,6 +84,10 @@ class AsyncExecutor:
 
     def register(self, kind: str, fn: Callable[[SubMesh, dict], Any]):
         self._fns[kind] = fn
+
+    def register_coalescable(self, kind: str, rule: CoalesceRule):
+        """Allow queued tasks of ``kind`` to fuse into shared dispatches."""
+        self._coalesce[kind] = rule
 
     def submit(self, task: Task):
         with self._lock:
@@ -82,6 +110,29 @@ class AsyncExecutor:
 
     # -- worker loop -------------------------------------------------------
 
+    def _coalesce_members(self, task: Task):
+        """Drain queued tasks compatible with ``task`` into one dispatch.
+        Returns (member tasks, fused payload)."""
+        rule = self._coalesce.get(task.kind)
+        if rule is None:
+            return [task], task.payload
+        # retried tasks run solo: if a fused dispatch failed, re-fusing the
+        # members would let one poisoned payload fail every compatible task
+        if task.retries > 0:
+            return [task], task.payload
+        members = [task]
+        budget = rule.max_rows - rule.rows(task)
+        if budget > 0:
+            key = rule.key(task)
+            members += self.queue.pop_matching(
+                lambda t: (t.kind == task.kind and not t.canceled
+                           and t.retries == 0 and rule.key(t) == key),
+                rows=rule.rows, budget=budget)
+        payload = rule.merge(members) if len(members) > 1 else task.payload
+        self._coalesce_log.append(
+            (len(members), sum(rule.rows(m) for m in members)))
+        return members, payload
+
     def _worker(self):
         while not self._stop.is_set():
             task = self.queue.pop_fitting(self.allocator.can_fit)
@@ -94,39 +145,62 @@ class AsyncExecutor:
             if sub is None:  # raced; try again later
                 self.queue.push(task)
                 continue
-            task.set_state(TaskState.SCHEDULED)
+            members, payload = self._coalesce_members(task)
+            t0 = time.monotonic()
+            for m in members:
+                m.set_state(TaskState.SCHEDULED)
             with self._lock:
-                self._running[task.uid] = (task, sub, time.monotonic())
+                for m in members:
+                    self._running[m.uid] = (m, sub, t0)
+            finished: List[Task] = []
             try:
-                task.set_state(TaskState.EXEC_SETUP)
+                for m in members:
+                    m.set_state(TaskState.EXEC_SETUP)
                 fn = self._fns[task.kind]
-                task.set_state(TaskState.RUNNING)
-                result = fn(sub, task.payload)
-                if task.canceled:
-                    task.set_state(TaskState.CANCELED)
-                else:
-                    task.result = result
-                    task.set_state(TaskState.DONE)
-                    d = task.duration()
-                    if d is not None:
-                        self._durations.setdefault(task.kind, []).append(d)
+                for m in members:
+                    m.set_state(TaskState.RUNNING)
+                result = fn(sub, payload)
+                results = (self._coalesce[task.kind].split(members, result)
+                           if len(members) > 1 else [result])
+                for m, r in zip(members, results):
+                    if m.canceled:
+                        m.set_state(TaskState.CANCELED)
+                    else:
+                        m.result = r
+                        m.set_state(TaskState.DONE)
+                        d = m.duration()
+                        if d is not None:
+                            self._durations.setdefault(m.kind, []).append(d)
+                    finished.append(m)
             except Exception as e:  # noqa: BLE001 — any payload failure
-                task.error = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
-                if task.retries < self.max_retries and not task.canceled:
-                    task.retries += 1
-                    with self._lock:
-                        self._running.pop(task.uid, None)
-                    self.allocator.release(sub)
-                    task.set_state(TaskState.QUEUED)
-                    self.queue.push(task)
-                    self._wake.set()
-                    continue
-                task.set_state(TaskState.FAILED)
+                err = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
+                retried: List[Task] = []
+                for m in members:
+                    m.error = err
+                    if m.retries < self.max_retries and not m.canceled:
+                        m.retries += 1
+                        retried.append(m)
+                    else:
+                        m.set_state(TaskState.FAILED)
+                        finished.append(m)
+                with self._lock:
+                    for m in members:
+                        self._running.pop(m.uid, None)
+                self.allocator.release(sub)
+                for m in retried:  # retry members independently (re-fusable)
+                    m.set_state(TaskState.QUEUED)
+                    self.queue.push(m)
+                self._wake.set()
+                for m in finished:
+                    self.completions.put(m)
+                continue
             with self._lock:
-                self._running.pop(task.uid, None)
+                for m in members:
+                    self._running.pop(m.uid, None)
             self.allocator.release(sub)
             self._wake.set()
-            self.completions.put(task)
+            for m in finished:
+                self.completions.put(m)
 
     # -- straggler watchdog --------------------------------------------
 
@@ -193,11 +267,24 @@ class AsyncExecutor:
 
     # -- metrics -----------------------------------------------------------
 
+    def coalesce_stats(self) -> dict:
+        log = list(self._coalesce_log)
+        fused = [(n, r) for n, r in log if n > 1]
+        return {
+            "dispatches": len(log),
+            "fused_dispatches": len(fused),
+            "tasks_fused": sum(n for n, _ in fused),
+            "rows_dispatched": sum(r for _, r in log),
+            "mean_tasks_per_dispatch": (
+                sum(n for n, _ in log) / len(log) if log else 0.0),
+        }
+
     def stats(self) -> dict:
         done = [t for t in self._tasks.values() if t.state == TaskState.DONE]
         setup = [t.setup_time() for t in done if t.setup_time()]
         run = [t.duration() for t in done if t.duration()]
         return {
+            "coalesce": self.coalesce_stats(),
             "n_tasks": len(self._tasks),
             "n_done": len(done),
             "n_failed": sum(1 for t in self._tasks.values()

@@ -10,9 +10,12 @@ pipelines to the idle resources when possible").
 from __future__ import annotations
 
 import threading
+from bisect import insort
 from typing import Callable, List, Optional
 
 from repro.core.pipeline import Task
+
+_order = (lambda t: (t.priority, t.uid))
 
 
 class TaskQueue:
@@ -23,8 +26,7 @@ class TaskQueue:
 
     def push(self, task: Task):
         with self._lock:
-            self._items.append(task)
-            self._items.sort(key=lambda t: (t.priority, t.uid))
+            insort(self._items, task, key=_order)  # O(n) vs full re-sort
 
     def pop_fitting(self, fits: Callable[[int], bool]) -> Optional[Task]:
         """Pop the highest-priority task; if it doesn't fit and backfill is
@@ -38,6 +40,31 @@ class TaskQueue:
                 if not self.backfill:
                     return None
             return None
+
+    def pop_matching(self, pred: Callable[[Task], bool],
+                     rows: Optional[Callable[[Task], int]] = None,
+                     budget: Optional[int] = None,
+                     limit: Optional[int] = None) -> List[Task]:
+        """Remove and return queued tasks satisfying ``pred``, in priority
+        order, until ``budget`` rows / ``limit`` tasks are reached — the
+        coalescing primitive: the executor drains compatible tasks into one
+        fused device batch."""
+        taken: List[Task] = []
+        with self._lock:
+            i = 0
+            while i < len(self._items):
+                if limit is not None and len(taken) >= limit:
+                    break
+                t = self._items[i]
+                if pred(t):
+                    r = rows(t) if rows is not None else 1
+                    if budget is None or r <= budget:
+                        taken.append(self._items.pop(i))
+                        if budget is not None:
+                            budget -= r
+                        continue
+                i += 1
+        return taken
 
     def remove(self, uid: int) -> Optional[Task]:
         with self._lock:

@@ -1,0 +1,354 @@
+"""Batched candidate-scoring engine tests: protocol equivalence of the
+batched top-k path vs the sequential seed path, coalescer fan-out across
+pipelines, batch-bucketing score invariance, and the speculative-winner
+double-handling fix in the coordinator."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
+                        ProteinPayload, ResourceRequest, Task, TaskState)
+from repro.core.payload import batch_log, bucket_rows
+from repro.runtime import AsyncExecutor, CoalesceRule, DeviceAllocator
+
+
+def proto(**kw):
+    kw.setdefault("n_candidates", 6)
+    kw.setdefault("n_cycles", 3)
+    kw.setdefault("gen_devices", 1)
+    kw.setdefault("predict_devices", 1)
+    kw.setdefault("max_reselections", 3)
+    return ImpressProtocol(ProtocolConfig(**kw))
+
+
+def new_pl(p, name="X"):
+    return p.new_pipeline(name, np.zeros((30, 16), np.float32),
+                          np.zeros(16, np.float32), 24,
+                          np.arange(1, 7, dtype=np.int32))
+
+
+def gen_result(n=6):
+    seqs = np.stack([np.full(24, i, np.int32) for i in range(n)])
+    lls = -np.arange(n, dtype=np.float32)
+    return seqs, lls
+
+
+def scripted_metrics(cycle, cand_idx):
+    """Deterministic per-(cycle, candidate) metrics — identical no matter
+    which path (sequential / batched / any k) scores the candidate."""
+    rng = np.random.default_rng(1000 * cycle + cand_idx)
+    return {"plddt": 40.0 + 40.0 * rng.random(),
+            "ptm": float(rng.random()),
+            "pae": 5.0 + 20.0 * rng.random()}
+
+
+def drive(p, pl, n_candidates=6):
+    """Run the protocol loop host-side with scripted scores; returns the
+    full per-candidate event sequence."""
+    events = []
+    tasks = [p.first_task(pl)]
+    while tasks and pl.active:
+        t = tasks.pop(0)
+        if t.kind == "generate":
+            tasks += p.on_generate_done(pl, gen_result(n_candidates))
+        elif t.kind == "predict":
+            m = scripted_metrics(pl.cycle, pl.meta["cand_idx"])
+            out = p.on_predict_done(pl, m)
+            events += out["events"]
+            tasks += out["tasks"]
+        elif t.kind == "predict_batch":
+            k = t.payload["sequences"].shape[0]
+            i0 = pl.meta["cand_idx"]
+            rows = [scripted_metrics(pl.cycle, i0 + r) for r in range(k)]
+            out = p.on_predict_batch_done(pl, {"rows": rows})
+            events += out["events"]
+            tasks += out["tasks"]
+    return events
+
+
+def test_batched_k1_reproduces_sequential_event_sequence():
+    """Acceptance: with batch size 1 the batched protocol reproduces the
+    seed protocol's event sequence bit-for-bit on a fixed seed."""
+    for seed in range(4):
+        p_seq = proto(seed=seed, score_batch=0)
+        p_b1 = proto(seed=seed, score_batch=1)
+        pl_seq, pl_b1 = new_pl(p_seq), new_pl(p_b1)
+        ev_seq = drive(p_seq, pl_seq)
+        ev_b1 = drive(p_b1, pl_b1)
+        assert ev_seq == ev_b1
+        assert pl_seq.cycle == pl_b1.cycle
+        assert pl_seq.meta["trajectories"] == pl_b1.meta["trajectories"]
+        assert [h["cand_idx"] for h in pl_seq.history] == \
+               [h["cand_idx"] for h in pl_b1.history]
+
+
+def test_batched_topk_same_decisions_fewer_round_trips():
+    """k>1 walks the same candidates in the same order: identical event
+    sequence and accepted designs, strictly fewer predict round-trips."""
+    p_seq = proto(seed=2, score_batch=0)
+    p_b4 = proto(seed=2, score_batch=4)
+    pl_seq, pl_b4 = new_pl(p_seq), new_pl(p_b4)
+    ev_seq = drive(p_seq, pl_seq)
+    ev_b4 = drive(p_b4, pl_b4)
+    assert ev_seq == ev_b4
+    assert [h["cand_idx"] for h in pl_seq.history] == \
+           [h["cand_idx"] for h in pl_b4.history]
+    np.testing.assert_allclose(pl_seq.meta["backbone"], pl_b4.meta["backbone"])
+
+
+def test_batch_k_respects_budget_and_control():
+    p = proto(score_batch=8, n_candidates=6, max_reselections=3)
+    pl = new_pl(p)
+    p.on_generate_done(pl, gen_result(6))
+    t = p._predict_batch_task(pl)
+    assert t.payload["sequences"].shape[0] == min(8, 6, 3 + 1)
+    ctrl = proto(adaptive=False, score_batch=8)
+    plc = new_pl(ctrl)
+    ctrl.on_generate_done(plc, gen_result(6))
+    tc = ctrl._predict_batch_task(plc)
+    assert tc.payload["sequences"].shape[0] == 1  # CONT-V stays sequential
+
+
+# ---------------------------------------------------------------------------
+# coalescer
+# ---------------------------------------------------------------------------
+
+def _toy_rule():
+    return CoalesceRule(
+        key=lambda t: 0,                            # all compatible
+        merge=lambda ts: {"xs": [x for t in ts for x in t.payload["xs"]]},
+        split=lambda ts, res: [
+            {"rows": res["rows"][sum(len(u.payload["xs"]) for u in ts[:i]):
+                                 sum(len(u.payload["xs"]) for u in ts[:i + 1])]}
+            for i in range(len(ts))],
+        rows=lambda t: len(t.payload["xs"]),
+        max_rows=32)
+
+
+def test_coalescer_fans_results_back_per_task():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    gate = threading.Event()
+    calls = []
+
+    def blocker(sm, payload):
+        gate.wait(timeout=10)
+        return None
+
+    def score(sm, payload):
+        calls.append(list(payload["xs"]))
+        return {"rows": [x * 10 for x in payload["xs"]]}
+
+    ex.register("blocker", blocker)
+    ex.register("pb", score)
+    ex.register_coalescable("pb", _toy_rule())
+    ex.submit(Task(kind="blocker", payload={}))   # hold the only device
+    time.sleep(0.1)
+    tasks = [Task(kind="pb", payload={"xs": [i, i + 100]}) for i in range(3)]
+    for t in tasks:
+        ex.submit(t)                              # all three queue up
+    gate.set()
+    done = [ex.drain(timeout=10) for _ in range(4)]
+    ex.shutdown()
+    by_uid = {t.uid: t for t in done if t is not None and t.kind == "pb"}
+    assert len(by_uid) == 3
+    # each parent task got exactly its own rows' results, in order
+    for t in tasks:
+        assert by_uid[t.uid].state == TaskState.DONE
+        assert by_uid[t.uid].result["rows"] == \
+            [x * 10 for x in t.payload["xs"]]
+    # the three queued tasks ran as one fused dispatch of 6 rows
+    assert len(calls) == 1 and len(calls[0]) == 6
+    st = ex.coalesce_stats()
+    assert st["fused_dispatches"] == 1 and st["tasks_fused"] == 3
+    assert st["rows_dispatched"] == 6
+
+
+def test_coalescer_failure_retries_members_individually():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1, max_retries=1)
+    gate = threading.Event()
+    n_calls = []
+
+    def blocker(sm, payload):
+        gate.wait(timeout=10)
+        return None
+
+    def flaky(sm, payload):
+        n_calls.append(len(payload["xs"]))
+        if len(n_calls) == 1:
+            raise RuntimeError("first fused dispatch dies")
+        return {"rows": [x for x in payload["xs"]]}
+
+    ex.register("blocker", blocker)
+    ex.register("pb", flaky)
+    ex.register_coalescable("pb", _toy_rule())
+    ex.submit(Task(kind="blocker", payload={}))
+    time.sleep(0.1)
+    for i in range(2):
+        ex.submit(Task(kind="pb", payload={"xs": [i]}))
+    gate.set()
+    done = [ex.drain(timeout=10) for _ in range(3)]
+    ex.shutdown()
+    pb = [t for t in done if t is not None and t.kind == "pb"]
+    assert len(pb) == 2
+    assert all(t.state == TaskState.DONE and t.retries == 1 for t in pb)
+    # fault isolation: the failed fused dispatch (2 rows) retried as two
+    # solo dispatches — retried tasks never re-fuse
+    assert n_calls == [2, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# bucketing (real payload models)
+# ---------------------------------------------------------------------------
+
+def test_bucket_rows_small_fixed_set():
+    assert [bucket_rows(n) for n in (1, 2, 3, 5, 8, 9, 33, 65, 200)] == \
+        [1, 2, 4, 8, 8, 16, 64, 128, 256]
+
+
+def test_padded_rows_do_not_change_scores():
+    """Acceptance: bucket padding must not perturb real rows — batched
+    scores of R=3 (padded to bucket 4) match per-candidate scores."""
+    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=12)
+    alloc = DeviceAllocator(jax.devices())
+    sub = alloc.request(1)
+    rng = np.random.default_rng(0)
+    seqs = rng.integers(1, 20, size=(3, 12)).astype(np.int32)
+    tgt = rng.normal(size=16).astype(np.float32)
+    batch_log.clear()
+    out = payload.predict_batch(sub, {"sequences": seqs, "target": tgt,
+                                      "receptor_len": 8})
+    assert len(out["rows"]) == 3
+    assert out["batch"]["bucket"] == 4 and out["batch"]["rows"] == 3
+    assert abs(out["batch"]["occupancy"] - 0.75) < 1e-9
+    assert batch_log and batch_log[-1]["bucket"] == 4
+    for i in range(3):
+        single = payload.predict(sub, {"sequence": seqs[i], "target": tgt,
+                                       "receptor_len": 8})
+        for k in ("plddt", "ptm", "pae"):
+            np.testing.assert_allclose(out["rows"][i][k], single[k],
+                                       rtol=2e-4, atol=2e-4)
+    # same bucket -> same compiled executable: R=4 reuses the R=3 (pad-to-4)
+    # compile cache entry
+    n_before = len([k for k in payload._cache if str(k[0]).startswith(
+        "predict_b")])
+    payload.predict_batch(sub, {
+        "sequences": rng.integers(1, 20, size=(4, 12)).astype(np.int32),
+        "target": tgt, "receptor_len": 8})
+    n_after = len([k for k in payload._cache if str(k[0]).startswith(
+        "predict_b")])
+    assert n_after == n_before
+    alloc.release(sub)
+
+
+# ---------------------------------------------------------------------------
+# coordinator: batched end-to-end + speculative-winner fix
+# ---------------------------------------------------------------------------
+
+class FakeBatchPayload:
+    """Instant deterministic payloads speaking both predict contracts."""
+
+    def __init__(self):
+        self.rng = np.random.default_rng(0)
+        self.n_pred_calls = 0
+
+    def generate(self, sm, payload):
+        n, L = payload["n"], payload["length"]
+        seqs = self.rng.integers(1, 21, size=(n, L)).astype(np.int32)
+        return seqs, -self.rng.random(n).astype(np.float32)
+
+    def _score(self, seq):
+        return {"plddt": 40.0 + float(np.mean(seq)), "ptm": 0.5, "pae": 15.0}
+
+    def predict(self, sm, payload):
+        self.n_pred_calls += 1
+        return self._score(payload["sequence"])
+
+    def predict_batch(self, sm, payload):
+        self.n_pred_calls += 1
+        seqs = np.atleast_2d(np.asarray(payload["sequences"]))
+        return {"rows": [self._score(s) for s in seqs],
+                "batch": {"rows": len(seqs), "bucket": bucket_rows(len(seqs)),
+                          "occupancy": len(seqs) / bucket_rows(len(seqs))}}
+
+
+def test_coordinator_batched_run_terminates_and_reports_occupancy():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    fp = FakeBatchPayload()
+    ex.register("generate", fp.generate)
+    ex.register("predict", fp.predict)
+    ex.register("predict_batch", fp.predict_batch)
+    p = proto(score_batch=4, n_cycles=2, max_sub_pipelines=2)
+    coord = Coordinator(ex, p)
+    for i in range(2):
+        coord.add_pipeline(new_pl(p, f"S{i}"))
+    rep = coord.run(timeout=60)
+    ex.shutdown()
+    assert rep["n_pipelines"] == 2
+    assert rep["executor"]["n_failed"] == 0
+    assert rep["n_score_batches"] >= 1
+    assert rep["batch_occupancy"] is not None
+    assert 0.0 < rep["batch_occupancy"] <= 1.0
+    # every pipeline either completed or was pruned
+    evs = [e["event"] for e in rep["events"]]
+    assert evs.count("completed") + evs.count("pruned") >= 2
+
+
+def test_speculative_winner_is_handled_once():
+    """A winning speculative duplicate must also retire the original task:
+    the original's later DONE completion may not advance the pipeline a
+    second time."""
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    fp = FakeBatchPayload()
+    ex.register("generate", fp.generate)
+    ex.register("predict", fp.predict)
+    p = proto(score_batch=0, n_cycles=3, spawn_sub_pipelines=False)
+    coord = Coordinator(ex, p)
+    pl = new_pl(p, "S")
+    coord.pipelines[pl.uid] = pl
+    p.on_generate_done(pl, gen_result(6))
+
+    orig = Task(kind="predict", pipeline_id=pl.uid, payload={},
+                resources=ResourceRequest(1))
+    coord._task_pipeline[orig.uid] = pl.uid
+    dup = Task(kind="predict", pipeline_id=pl.uid, payload={},
+               speculative_of=orig.uid, resources=ResourceRequest(1))
+    coord._task_pipeline[dup.uid] = pl.uid
+    coord._inflight = 1  # orig is "in flight"
+
+    dup.result = {"plddt": 80.0, "ptm": 0.8, "pae": 8.0}
+    dup.set_state(TaskState.DONE)
+    coord._handle(dup)            # duplicate wins -> cycle advances once
+    assert pl.cycle == 1
+    assert pl.meta["trajectories"] == 1
+
+    orig.result = {"plddt": 80.0, "ptm": 0.8, "pae": 8.0}
+    orig.set_state(TaskState.DONE)
+    coord._handle(orig)           # late original: must be a no-op
+    assert pl.cycle == 1
+    assert pl.meta["trajectories"] == 1
+
+    # a late-FAILING original (cooperative cancel raced a real error) must
+    # not deactivate a pipeline that already advanced on its duplicate
+    orig2 = Task(kind="predict", pipeline_id=pl.uid, payload={},
+                 resources=ResourceRequest(1))
+    coord._task_pipeline[orig2.uid] = pl.uid
+    dup2 = Task(kind="predict", pipeline_id=pl.uid, payload={},
+                speculative_of=orig2.uid, resources=ResourceRequest(1))
+    coord._task_pipeline[dup2.uid] = pl.uid
+    dup2.result = {"plddt": 90.0, "ptm": 0.9, "pae": 5.0}
+    dup2.set_state(TaskState.DONE)
+    coord._handle(dup2)
+    assert pl.cycle == 2
+    orig2.error = "boom"
+    orig2.set_state(TaskState.FAILED)
+    coord._handle(orig2)
+    ex.shutdown()
+    assert pl.active and pl.cycle == 2
+    assert not any(e["event"] == "FAILED" for e in coord.events)

@@ -6,7 +6,11 @@ import time
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra (requirements-dev.txt): skip properties only
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core.pipeline import ResourceRequest, Task, TaskState
 from repro.runtime import AsyncExecutor, DeviceAllocator, TaskQueue
