@@ -25,7 +25,7 @@ from repro.runtime import AsyncExecutor, DeviceAllocator
 def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,
                 n_candidates=6, receptor_len=24, seed=0,
                 max_sub_pipelines=8, reduced=True, timeout=900.0,
-                score_batch=0):
+                score_batch=0, generate_batch_size=0):
     tasks = protein_design_tasks(n_structures, receptor_len=receptor_len,
                                  peptide_len=6, seed=seed)
     alloc = DeviceAllocator(jax.devices())
@@ -33,14 +33,14 @@ def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,
     t_boot0 = time.monotonic()
     payload = ProteinPayload(jax.random.PRNGKey(seed), reduced=reduced,
                              length=receptor_len)
-    payload.register_all(ex)
+    payload.register_all(ex, generate_batch_rows=generate_batch_size)
     bootstrap_s = time.monotonic() - t_boot0
     clear_compile_log()
     pc = ProtocolConfig(
         n_candidates=n_candidates, n_cycles=n_cycles, adaptive=adaptive,
         gen_devices=min(2, len(jax.devices())), predict_devices=1,
         max_sub_pipelines=max_sub_pipelines if adaptive else 0, seed=seed,
-        score_batch=score_batch)
+        score_batch=score_batch, generate_batch_size=generate_batch_size)
     proto = ImpressProtocol(pc)
     coord = Coordinator(ex, proto, max_inflight=None if adaptive else 1)
     for t in tasks:

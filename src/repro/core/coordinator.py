@@ -10,6 +10,12 @@ resources exist ("offloading the newly created pipelines ... to the idle
 resources when possible"), otherwise they are parked and retried on the next
 completion.
 
+Batched completions: ``predict_batch`` and ``generate_batch`` tasks complete
+with their pipeline's row slice of a (possibly cross-pipeline fused) device
+batch; the coordinator routes them to the protocol's ``on_*_batch_done``
+handlers and tracks bucket occupancy per dispatch leader, reported alongside
+the allocator's row-proportional shape stats.
+
 The coordinator state (trajectory pool, per-pipeline history) is
 JSON-serializable via ``state_dict`` for checkpoint/restart.
 """
@@ -40,6 +46,7 @@ class Coordinator:
         self.events: List[dict] = []
         self._done_task_uids: set = set()
         self._occupancy: List[float] = []   # predict_batch bucket occupancy
+        self._gen_occupancy: List[float] = []  # generate_batch occupancy
 
     # -- submission channel ------------------------------------------------
 
@@ -95,7 +102,23 @@ class Coordinator:
 
     # -- completion channel ---------------------------------------------------
 
+    def _record_occupancy(self, task: Task):
+        """Per-dispatch bucket occupancy, counted once per completed task
+        that led a device batch (fused members report leader=False) — even
+        when the completion won't advance its pipeline (speculative-winner
+        dedup, inactive pipeline), the dispatch still physically ran."""
+        if task.state != TaskState.DONE or not isinstance(task.result, dict):
+            return
+        b = task.result.get("batch")
+        if not b or not b.get("leader", True):
+            return
+        if task.kind == "generate_batch":
+            self._gen_occupancy.append(float(b["occupancy"]))
+        elif task.kind == "predict_batch":
+            self._occupancy.append(float(b["occupancy"]))
+
     def _handle(self, task: Task):
+        self._record_occupancy(task)
         pl = self.pipelines.get(self._task_pipeline.get(task.uid, -1))
         if task.speculative_of is not None:
             # speculative duplicate: only count if the original hasn't won
@@ -122,17 +145,17 @@ class Coordinator:
         self._done_task_uids.add(task.uid)
         if pl is None or not pl.active:
             return
-        if task.kind == "generate":
-            for t in self.protocol.on_generate_done(pl, task.result):
+        if task.kind in ("generate", "generate_batch"):
+            if task.kind == "generate_batch":
+                tasks = self.protocol.on_generate_batch_done(pl, task.result)
+            else:
+                tasks = self.protocol.on_generate_done(pl, task.result)
+            for t in tasks:
                 t.pipeline_id = pl.uid
                 self._enqueue(t)
         elif task.kind in ("predict", "predict_batch"):
             if task.kind == "predict_batch":
                 out = self.protocol.on_predict_batch_done(pl, task.result)
-                b = (task.result or {}).get("batch") \
-                    if isinstance(task.result, dict) else None
-                if b and b.get("leader", True):
-                    self._occupancy.append(float(b["occupancy"]))
             else:
                 out = self.protocol.on_predict_done(pl, task.result)
             for ev in out.get("events",
@@ -199,6 +222,10 @@ class Coordinator:
             "batch_occupancy": (float(np.mean(self._occupancy))
                                 if self._occupancy else None),
             "n_score_batches": len(self._occupancy),
+            "gen_batch_occupancy": (float(np.mean(self._gen_occupancy))
+                                    if self._gen_occupancy else None),
+            "n_generate_batches": len(self._gen_occupancy),
+            "allocator_shapes": self.executor.allocator.shape_stats(),
             "cycles": cycles,
             "events": self.events,
         }

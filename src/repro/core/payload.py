@@ -1,10 +1,22 @@
 """Device payload functions for IMPRESS tasks.
 
-``generate`` (ProteinMPNN analogue) and ``predict`` (AlphaFold analogue) are
-JAX computations dispatched onto the sub-mesh a task was allocated. Candidate
-sampling splits across the sub-mesh's devices (independent streams — the
-closest analogue of RP placing independent processes on each GPU) and relies
-on JAX async dispatch so all devices run concurrently.
+Four task kinds run on the sub-mesh a task was allocated:
+
+``generate`` (ProteinMPNN analogue) — samples one pipeline's candidates,
+  split across the sub-mesh's devices (independent streams — the closest
+  analogue of RP placing independent processes on each GPU).
+``generate_batch`` — the continuously-batched form: a (rows, n_candidates,
+  L) stack sampled in one jitted call per device, one row per pipeline.
+  Rows are keyed per-row (``seeds``), so a row's samples are identical no
+  matter which other pipelines' rows share the device batch — coalescing
+  and rolling admission cannot perturb results.
+``predict`` (AlphaFold analogue) — scores one candidate sequence.
+``predict_batch`` — vectorized scoring of a candidate stack.
+
+Both batched kinds pad their batch dim up to a ``BATCH_BUCKETS`` size
+(bounding the jit cache) and split the padded stack across the sub-mesh's
+devices. Their coalesce rules (``*_coalesce_rule``) let the executor fuse
+compatible queued tasks from different pipelines into one device batch.
 
 Compiled executables are cached per (kind, device, shape) — the cache-miss
 path is the paper's "Exec setup" phase (Fig. 5) and is tracked in
@@ -23,6 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import protein as prot
+# Canonical bucketing lives in the runtime layer (the allocator sizes
+# sub-meshes off the same buckets); re-exported here for back-compat.
+from repro.runtime.allocator import BATCH_BUCKETS, bucket_rows  # noqa: F401
 
 compile_log: Dict[str, list] = {"generate": [], "predict": []}
 
@@ -30,21 +45,45 @@ compile_log: Dict[str, list] = {"generate": [], "predict": []}
 # rows and device fan-out — the occupancy numbers behind report()/benchmarks.
 batch_log: List[dict] = []
 
-# Batch-dim buckets predict_batch pads to. A small fixed set keeps the
-# jit-cache bounded: every (rows, length) lands on one of
-# len(BATCH_BUCKETS) × |lengths| compiled executables.
-BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+# Same, for generate_batch dispatches.
+gen_batch_log: List[dict] = []
 
 
-def bucket_rows(n: int) -> int:
-    """Smallest bucket >= n (next power of two above the largest bucket)."""
-    for b in BATCH_BUCKETS:
-        if n <= b:
-            return b
-    b = BATCH_BUCKETS[-1]
-    while b < n:
-        b *= 2
-    return b
+def _pad_rows(arrs: List[np.ndarray], rows: int):
+    """Pad each array's leading dim from ``rows`` up to its bucket size by
+    repeating the last real row (dropped again before results return).
+    Returns (padded arrays, bucket)."""
+    B = bucket_rows(rows)
+    if B > rows:
+        arrs = [np.concatenate([a, np.repeat(a[-1:], B - rows, 0)])
+                for a in arrs]
+    return arrs, B
+
+
+def _split_devices(submesh, bucket: int):
+    """Largest even split of ``bucket`` rows across the sub-mesh's devices.
+    Returns (devices to use, rows per device)."""
+    devices = list(submesh.devices.flat)
+    ndev = min(len(devices), bucket)
+    while bucket % ndev:
+        ndev -= 1
+    return devices[:ndev], bucket // ndev
+
+
+def _fan_out_rows(tasks, result, n_rows):
+    """Shared ``CoalesceRule.split``: slice a fused {"rows", "batch"}
+    result back into one per member task, stamping fused/leader so the
+    coordinator counts each dispatch's occupancy exactly once."""
+    rows = result["rows"]
+    info = result.get("batch", {})
+    outs, at = [], 0
+    for i, t in enumerate(tasks):
+        k = n_rows(t)
+        outs.append({"rows": rows[at:at + k],
+                     "batch": dict(info, fused=len(tasks),
+                                   leader=(i == 0))})
+        at += k
+    return outs
 
 
 class ProteinPayload:
@@ -104,7 +143,7 @@ class ProteinPayload:
             if take <= 0:
                 break
             fn = self._compiled(
-                f"generate{take}", dev,
+                f"generate{take}_L{length}_t{temp}", dev,
                 lambda take=take: jax.jit(
                     partial(prot.progen_sample, n=take, length=length,
                             cfg=self.gen_cfg, temperature=temp)))
@@ -153,18 +192,11 @@ class ProteinPayload:
         if tgt.ndim == 1:
             tgt = np.tile(tgt[None], (R, 1))
         split = int(payload["receptor_len"])
-        B = bucket_rows(R)
-        if B > R:
-            seqs = np.concatenate([seqs, np.repeat(seqs[-1:], B - R, 0)])
-            tgt = np.concatenate([tgt, np.repeat(tgt[-1:], B - R, 0)])
-        devices = list(submesh.devices.flat)
-        ndev = min(len(devices), B)
-        while B % ndev:
-            ndev -= 1
-        per = B // ndev
+        (seqs, tgt), B = _pad_rows([seqs, tgt], R)
+        devices, per = _split_devices(submesh, B)
+        ndev = len(devices)
         futures = []
-        for i in range(ndev):
-            dev = devices[i]
+        for i, dev in enumerate(devices):
             fn = self._compiled(
                 f"predict_b{per}_L{L}_{split}", dev,
                 lambda: jax.jit(partial(prot.foldscore_fwd, cfg=self.fold_cfg,
@@ -181,13 +213,87 @@ class ProteinPayload:
         batch_log.append(batch)
         return {"rows": prot.metrics_rows(m, R), "batch": dict(batch)}
 
-    def register_all(self, executor):
+    def _gen_batch_builder(self, n, length, temp):
+        """Jitted (params, backbones (R,P,16), keys (R,2)) -> per-row
+        samples ((R,n,L), (R,n)). vmap over rows with per-row PRNG keys:
+        each row samples exactly as it would alone, so fused batches are
+        reproducible per pipeline."""
+        cfg = self.gen_cfg
+
+        def row(params, bb, key):
+            s, lp = prot.progen_sample(params, bb[None], n=n, length=length,
+                                       cfg=cfg, key=key, temperature=temp)
+            return s[0], lp[0]
+
+        return jax.jit(jax.vmap(row, in_axes=(None, 0, 0)))
+
+    def generate_batch(self, submesh, payload):
+        """Sample a (rows, n, L) candidate stack in one jitted call per
+        device — one row per pipeline.
+
+        payload: backbones (R, P, 16) f32 (or (P, 16) for one row); seeds
+        (R,) per-row PRNG seeds; n, length, temperature as in ``generate``.
+        The row dim is padded up to a ``BATCH_BUCKETS`` size (pad rows
+        repeat the last real row, are dropped before returning, and cannot
+        perturb real rows — every row samples from its own key) and the
+        padded stack splits evenly across the sub-mesh's devices.
+
+        Returns {"rows": [(seqs (n,L) i32, lls (n,) f32) per row],
+        "batch": occupancy info}.
+        """
+        bbs = np.asarray(payload["backbones"], np.float32)
+        if bbs.ndim == 2:
+            bbs = bbs[None]
+        R = bbs.shape[0]
+        n, length = int(payload["n"]), int(payload["length"])
+        temp = float(payload.get("temperature", 1.0))
+        seeds = np.asarray(payload["seeds"], np.int64).reshape(-1)
+        (bbs, seeds), B = _pad_rows([bbs, seeds], R)
+        # per-row threefry keys packed host-side ((hi, lo) uint32 words, the
+        # layout jax.random.PRNGKey produces) — one vectorized construction
+        # instead of B eager device calls
+        s64 = seeds.astype(np.uint64)
+        keys = np.stack([(s64 >> np.uint64(32)).astype(np.uint32),
+                         (s64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)],
+                        axis=1)
+        bbs = bbs[:, :self.gen_cfg.frontend_seq]
+        devices, per = _split_devices(submesh, B)
+        ndev = len(devices)
+        futures = []
+        for i, dev in enumerate(devices):
+            fn = self._compiled(
+                f"generate_b{per}_n{n}_L{length}_t{temp}", dev,
+                lambda: self._gen_batch_builder(n, length, temp))
+            gp = self._params_on("gen", self.gen_params, dev)
+            b = jax.device_put(bbs[i * per:(i + 1) * per], dev)
+            k = jax.device_put(keys[i * per:(i + 1) * per], dev)
+            futures.append(fn(gp, b, k))
+        seqs = np.concatenate([np.asarray(f[0]) for f in futures])[:R]
+        lls = np.concatenate([np.asarray(f[1]) for f in futures])[:R]
+        rows = [(seqs[r].astype(np.int32), lls[r].astype(np.float32))
+                for r in range(R)]
+        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev}
+        gen_batch_log.append(batch)
+        return {"rows": rows, "batch": dict(batch)}
+
+    def register_all(self, executor, generate_batch_rows: int = None):
+        """Register every task fn (and, when the executor supports it, the
+        batched kinds' coalesce rules). ``generate_batch_rows`` bounds the
+        fused generate batch — pass ``ProtocolConfig.generate_batch_size``
+        so the config's 'up to this many rows per device batch' contract
+        holds; None keeps the BATCH_BUCKETS cap."""
         executor.register("generate", self.generate)
+        executor.register("generate_batch", self.generate_batch)
         executor.register("predict", self.predict)
         executor.register("predict_batch", self.predict_batch)
         if hasattr(executor, "register_coalescable"):
             executor.register_coalescable("predict_batch",
                                           predict_batch_coalesce_rule())
+            executor.register_coalescable(
+                "generate_batch",
+                generate_batch_coalesce_rule(
+                    max_rows=(generate_batch_rows if generate_batch_rows
+                              else BATCH_BUCKETS[-1])))
 
 
 def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
@@ -221,25 +327,56 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
                 "receptor_len": tasks[0].payload["receptor_len"]}
 
     def split(tasks, result):
-        rows = result["rows"]
-        info = result.get("batch", {})
-        outs, at = [], 0
-        for i, t in enumerate(tasks):
-            k = n_rows(t)
-            outs.append({"rows": rows[at:at + k],
-                         "batch": dict(info, fused=len(tasks),
-                                       leader=(i == 0))})
-            at += k
-        return outs
+        return _fan_out_rows(tasks, result, n_rows)
 
     return CoalesceRule(key=key, merge=merge, split=split, rows=n_rows,
                         max_rows=max_rows)
+
+
+def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
+                                 admission_window: float = 0.005):
+    """Coalescing contract for ``generate_batch`` tasks: one-row tasks from
+    *different* pipelines with the same (n, length, backbone prefix shape,
+    temperature) stack into one device batch; per-row seeds keep each
+    pipeline's sampling stream. The default ``admission_window`` enables
+    rolling admission — compatible tasks queued while a batch is being
+    assembled join it instead of waiting a full cycle."""
+    from repro.runtime.executor import CoalesceRule
+
+    def bbs(task):
+        b = np.asarray(task.payload["backbones"], np.float32)
+        return b[None] if b.ndim == 2 else b
+
+    def n_rows(task):
+        return int(bbs(task).shape[0])
+
+    def key(task):
+        p = task.payload
+        return (int(p["n"]), int(p["length"]), bbs(task).shape[1:],
+                float(p.get("temperature", 1.0)))
+
+    def merge(tasks):
+        return {"backbones": np.concatenate([bbs(t) for t in tasks]),
+                "seeds": np.concatenate(
+                    [np.asarray(t.payload["seeds"], np.int64).reshape(-1)
+                     for t in tasks]),
+                "n": tasks[0].payload["n"],
+                "length": tasks[0].payload["length"],
+                "temperature": tasks[0].payload.get("temperature", 1.0)}
+
+    def split(tasks, result):
+        return _fan_out_rows(tasks, result, n_rows)
+
+    return CoalesceRule(key=key, merge=merge, split=split, rows=n_rows,
+                        max_rows=max_rows,
+                        admission_window=admission_window)
 
 
 def clear_compile_log():
     for v in compile_log.values():
         v.clear()
     batch_log.clear()
+    gen_batch_log.clear()
 
 
 def _ll_loss(params, backbone, seqs, weights, cfg):

@@ -35,6 +35,9 @@ _uid = itertools.count()
 class ResourceRequest:
     n_devices: int = 1
     preferred_shape: Optional[tuple] = None  # e.g. (2, 2) sub-mesh
+    rows: Optional[int] = None  # batch-row footprint: when set, n_devices
+    #   is the floor and the allocator scales the grant with the bucketed
+    #   row count of the dispatch (see DeviceAllocator.request_for_rows)
 
 
 @dataclass

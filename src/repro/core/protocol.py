@@ -28,6 +28,17 @@ re-select / prune rules — up to ``max_reselections`` round-trips collapse
 into one. With k=1 the batched path reproduces the sequential event sequence
 bit-for-bit (tests/test_batched_scoring.py); the CONT-V control is clamped
 to k=1. ``score_batch=0`` (default) keeps the seed per-candidate tasks.
+
+Batched generation (``generate_batch_size >= 1``): stage 1 is submitted as a
+one-row ``generate_batch`` task instead of a per-pipeline ``generate`` task.
+The executor's rolling-admission coalescer stacks compatible rows from other
+pipelines into one device batch of up to ``generate_batch_size`` rows;
+per-row seeds keep each pipeline's sampling stream, so the protocol decision
+sequence is unchanged (tests/test_generate_batching.py). Batched tasks carry
+a row footprint (``ResourceRequest.rows``), so the allocator grants a
+sub-mesh proportional to the fused batch instead of the fixed
+``gen_devices``/``predict_devices`` counts. ``generate_batch_size=0``
+(default) keeps the seed per-pipeline path; the CONT-V control always does.
 """
 
 from __future__ import annotations
@@ -58,6 +69,9 @@ class ProtocolConfig:
     seed: int = 0
     score_batch: int = 0  # 0: per-candidate predict tasks (sequential seed
     #                       path); k>=1: top-k batched predict_batch tasks
+    generate_batch_size: int = 0  # 0: one generate task per pipeline cycle
+    #   (seed path); >=1: coalescable one-row generate_batch tasks that
+    #   fuse across pipelines up to this many rows per device batch
 
 
 def fitness(metrics: Dict[str, float]) -> float:
@@ -109,13 +123,28 @@ class ImpressProtocol:
     # -- task builders -----------------------------------------------------
 
     def _generate_task(self, pl: Pipeline) -> Task:
+        """Stage-1 task. Seed path: a per-pipeline ``generate`` on the fixed
+        ``gen_devices`` sub-mesh. Batched path (``generate_batch_size >= 1``,
+        adaptive only — CONT-V stays sequential): a one-row
+        ``generate_batch`` that the executor may stack with other pipelines'
+        rows; ``rows=1`` makes the allocator size the sub-mesh by the fused
+        batch, floored at one device."""
         c = self.cfg
+        seed = c.seed + 1000 * pl.uid + pl.cycle
+        if c.generate_batch_size >= 1 and c.adaptive:
+            return Task(kind="generate_batch", pipeline_id=pl.uid, payload={
+                "backbones": pl.meta["backbone"][None],
+                "seeds": [seed],
+                "n": c.n_candidates,
+                "length": pl.meta["receptor_len"],
+                "temperature": c.temperature,
+            }, resources=ResourceRequest(n_devices=1, rows=1))
         return Task(kind="generate", pipeline_id=pl.uid, payload={
             "backbone": pl.meta["backbone"],
             "n": c.n_candidates,
             "length": pl.meta["receptor_len"],
             "temperature": c.temperature,
-            "seed": c.seed + 1000 * pl.uid + pl.cycle,
+            "seed": seed,
         }, resources=ResourceRequest(n_devices=c.gen_devices))
 
     def _predict_task(self, pl: Pipeline) -> Task:
@@ -155,7 +184,8 @@ class ImpressProtocol:
             "sequences": stack,
             "target": pl.meta["target"],
             "receptor_len": pl.meta["receptor_len"],
-        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices))
+        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices,
+                                     rows=k))
 
     def _next_predict_task(self, pl: Pipeline) -> Task:
         return (self._predict_batch_task(pl) if self.cfg.score_batch >= 1
@@ -173,6 +203,18 @@ class ImpressProtocol:
         pl.meta["cand_idx"] = 0
         pl.meta["reselections"] = 0
         return [self._next_predict_task(pl)]
+
+    def on_generate_batch_done(self, pl: Pipeline, result) -> List[Task]:
+        """Completion of this pipeline's row of a (possibly fused)
+        ``generate_batch``: unwrap the single row and apply the stage-2+3
+        ranking exactly as a ``generate`` completion would."""
+        rows = result["rows"] if isinstance(result, dict) else list(result)
+        if len(rows) != 1:
+            raise ValueError(
+                f"pipeline {pl.uid} expected its own generate_batch row, "
+                f"got {len(rows)}")
+        seqs, lls = rows[0]
+        return self.on_generate_done(pl, (seqs, lls))
 
     def on_predict_done(self, pl: Pipeline, metrics: Dict[str, float]
                         ) -> Dict[str, Any]:

@@ -1,6 +1,7 @@
-from repro.runtime.allocator import DeviceAllocator, SubMesh
+from repro.runtime.allocator import (BATCH_BUCKETS, DeviceAllocator, SubMesh,
+                                     bucket_rows)
 from repro.runtime.executor import AsyncExecutor, CoalesceRule
 from repro.runtime.scheduler import TaskQueue
 
-__all__ = ["DeviceAllocator", "SubMesh", "AsyncExecutor", "CoalesceRule",
-           "TaskQueue"]
+__all__ = ["BATCH_BUCKETS", "DeviceAllocator", "SubMesh", "bucket_rows",
+           "AsyncExecutor", "CoalesceRule", "TaskQueue"]

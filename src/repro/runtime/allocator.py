@@ -8,6 +8,12 @@ neighbours), builds a ``jax.sharding.Mesh`` over it, and reclaims it on
 release. It supports elastic shrink on device failure (failed devices leave
 the pool; affected allocations are reported so their tasks can be requeued)
 and exposes the utilization accounting used by the paper's Fig. 4/5.
+
+Batch-aware shapes: batched tasks (``ResourceRequest.rows``) go through
+``request_for_rows`` — the grant scales with the bucketed row count of the
+device batch instead of a fixed per-kind device count, shrinking by halving
+under device pressure (never below the request's floor). ``shape_stats``
+summarizes the grants for the coordinator's report.
 """
 
 from __future__ import annotations
@@ -22,6 +28,23 @@ import numpy as np
 from jax.sharding import Mesh
 
 _uid = itertools.count()
+
+# Batch-dim buckets batched payloads pad to. A small fixed set keeps the
+# jit-cache bounded: every (rows, length) lands on one of
+# len(BATCH_BUCKETS) × |lengths| compiled executables. Canonical home —
+# ``core.payload`` re-exports these for the payload/protocol layers.
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_rows(n: int) -> int:
+    """Smallest bucket >= n (next power of two above the largest bucket)."""
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    b = BATCH_BUCKETS[-1]
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
@@ -69,6 +92,7 @@ class DeviceAllocator:
         self._t0 = time.monotonic()
         self._busy_log: List[Tuple[float, float, int]] = []  # start,end,ndev
         self._open: Dict[int, Tuple[float, int]] = {}
+        self._shape_log: List[dict] = []  # row-proportional grant records
 
     # -- carving ---------------------------------------------------------
 
@@ -113,6 +137,53 @@ class DeviceAllocator:
             del self.allocations[sub.uid]
             start, ndev = self._open.pop(sub.uid)
             self._busy_log.append((start, time.monotonic(), ndev))
+
+    # -- batch-aware shapes ------------------------------------------------
+
+    def grant_for_rows(self, rows: int, floor: int = 1) -> int:
+        """Device count a batch of ``rows`` rows should run across: the
+        largest power of two <= min(bucketed rows, healthy pool) — powers of
+        two split bucketed batches evenly — never below ``floor`` (the
+        request's fixed-size fallback)."""
+        cap = min(bucket_rows(max(1, int(rows))), self.healthy_devices)
+        n = 1
+        while n * 2 <= cap:
+            n *= 2
+        return max(int(floor), n)
+
+    def request_for_rows(self, rows: int, floor: int = 1
+                         ) -> Optional[SubMesh]:
+        """Carve a sub-mesh sized proportionally to a device batch's
+        bucketed row count (replacing fixed per-kind device counts). Under
+        device pressure the grant shrinks by halving toward ``floor``;
+        returns None only when even ``floor`` devices cannot be carved.
+        Every grant is recorded for ``shape_stats``."""
+        want = self.grant_for_rows(rows, floor)
+        n = want
+        while True:
+            sub = self.request(n)
+            if sub is not None:
+                self._shape_log.append({
+                    "rows": int(rows),
+                    "bucket": bucket_rows(max(1, int(rows))),
+                    "want": want, "granted": n, "shape": sub.shape})
+                return sub
+            if n <= floor:
+                return None
+            n = max(int(floor), n // 2)
+
+    def shape_stats(self) -> dict:
+        """Summary of row-proportional grants (coordinator report)."""
+        log = list(self._shape_log)
+        return {
+            "grants": len(log),
+            "mean_granted": (sum(e["granted"] for e in log) / len(log)
+                             if log else 0.0),
+            "mean_rows_per_device": (
+                sum(e["rows"] / e["granted"] for e in log) / len(log)
+                if log else 0.0),
+            "downsized": sum(1 for e in log if e["granted"] < e["want"]),
+        }
 
     # -- failures / elasticity -------------------------------------------
 

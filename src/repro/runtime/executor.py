@@ -21,6 +21,18 @@ Task coalescing: kinds registered via ``register_coalescable`` carry a
 rows, runs the payload fn once on the merged payload, and fans the result
 back out so each member task completes independently. Queued work thus
 soaks spare batch capacity as rows instead of waiting for whole sub-meshes.
+
+Rolling admission (continuous batching): a rule with ``admission_window``
+> 0 holds the dispatch open for that many seconds after the dequeue-time
+drain, re-admitting compatible tasks that other pipelines queue *during*
+the window — late arrivals join the next device batch instead of waiting a
+full protocol cycle. The window closes early once ``max_rows`` is reached.
+
+Batch-aware allocation: tasks whose ``ResourceRequest.rows`` is set get a
+sub-mesh sized by ``DeviceAllocator.request_for_rows`` — proportional to
+the bucketed row count of the dispatch (the popped task's rows plus any
+queued compatible rows it is about to coalesce), with ``n_devices`` as the
+floor — instead of the fixed ``n_devices`` grant.
 """
 
 from __future__ import annotations
@@ -43,12 +55,16 @@ class CoalesceRule:
     """How to fuse compatible queued tasks of one kind into a single
     dispatch. ``key`` defines compatibility; ``merge`` builds the fused
     payload from the member tasks; ``split`` maps the fused result back to
-    one result per member; ``rows`` is a member's batch-row footprint."""
+    one result per member; ``rows`` is a member's batch-row footprint.
+    ``admission_window`` > 0 enables rolling admission: the dispatch stays
+    open that many seconds so compatible tasks queued after the dequeue
+    still join the batch (closing early once ``max_rows`` is reached)."""
     key: Callable[[Task], Any]
     merge: Callable[[List[Task]], dict]
     split: Callable[[List[Task], Any], List[Any]]
     rows: Callable[[Task], int]
     max_rows: int = 64
+    admission_window: float = 0.0
 
 
 class AsyncExecutor:
@@ -110,7 +126,22 @@ class AsyncExecutor:
 
     # -- worker loop -------------------------------------------------------
 
-    def _coalesce_members(self, task: Task):
+    def _compatible_with(self, task: Task, rule: CoalesceRule):
+        key = rule.key(task)
+        return lambda t: (t.kind == task.kind and not t.canceled
+                          and t.retries == 0 and rule.key(t) == key)
+
+    def _track(self, members: List[Task], sub: SubMesh):
+        """Register dispatch members in ``_running`` as soon as they leave
+        the queue — during an admission window too — so ``cancel`` and
+        ``inject_device_failure`` can reach a dispatch while it is still
+        being assembled (the worker loop later refreshes the timestamps)."""
+        now = time.monotonic()
+        with self._lock:
+            for m in members:
+                self._running[m.uid] = (m, sub, now)
+
+    def _coalesce_members(self, task: Task, sub: SubMesh):
         """Drain queued tasks compatible with ``task`` into one dispatch.
         Returns (member tasks, fused payload)."""
         rule = self._coalesce.get(task.kind)
@@ -122,16 +153,66 @@ class AsyncExecutor:
             return [task], task.payload
         members = [task]
         budget = rule.max_rows - rule.rows(task)
+        pred = self._compatible_with(task, rule)
         if budget > 0:
-            key = rule.key(task)
-            members += self.queue.pop_matching(
-                lambda t: (t.kind == task.kind and not t.canceled
-                           and t.retries == 0 and rule.key(t) == key),
-                rows=rule.rows, budget=budget)
+            taken = self.queue.pop_matching(pred, rows=rule.rows,
+                                            budget=budget)
+            self._track(taken, sub)
+            members += taken
+            budget -= sum(rule.rows(m) for m in taken)
+        # rolling admission: hold the dispatch open so compatible tasks
+        # queued by other pipelines *after* this dequeue still join
+        if rule.admission_window > 0 and budget > 0:
+            deadline = time.monotonic() + rule.admission_window
+            while (budget > 0 and time.monotonic() < deadline
+                   and not self._stop.is_set()):
+                time.sleep(min(0.002, rule.admission_window))
+                late = self.queue.pop_matching(pred, rows=rule.rows,
+                                               budget=budget)
+                self._track(late, sub)
+                members += late
+                budget -= sum(rule.rows(m) for m in late)
         payload = rule.merge(members) if len(members) > 1 else task.payload
         self._coalesce_log.append(
             (len(members), sum(rule.rows(m) for m in members)))
         return members, payload
+
+    def _maybe_regrow(self, task: Task, sub: SubMesh,
+                      members: List[Task]) -> SubMesh:
+        """Rolling admission can fuse more rows than were queued when the
+        sub-mesh was granted. If the fused dispatch warrants more devices,
+        upgrade the allocation before running (keeping the original mesh
+        whenever the pool can't do better right now)."""
+        res = task.resources
+        rule = self._coalesce.get(task.kind)
+        if res.rows is None or rule is None or len(members) == 1:
+            return sub
+        rows = sum(rule.rows(m) for m in members)
+        if self.allocator.grant_for_rows(rows, res.n_devices) <= sub.n_devices:
+            return sub
+        bigger = self.allocator.request_for_rows(rows, floor=res.n_devices)
+        if bigger is None or bigger.n_devices <= sub.n_devices:
+            if bigger is not None:
+                self.allocator.release(bigger)
+            return sub
+        self.allocator.release(sub)
+        return bigger
+
+    def _allocate(self, task: Task) -> Optional[SubMesh]:
+        """Sub-mesh for ``task``: the fixed ``n_devices`` grant, or — when
+        the request carries ``rows`` — a shape proportional to the bucketed
+        row count of the dispatch (its own rows plus queued compatible rows
+        it is about to coalesce), with ``n_devices`` as the floor."""
+        res = task.resources
+        if res.rows is None:
+            return self.allocator.request(res.n_devices, res.preferred_shape)
+        rows = int(res.rows)
+        rule = self._coalesce.get(task.kind)
+        if rule is not None and task.retries == 0:
+            queued = self.queue.matching_rows(
+                self._compatible_with(task, rule), rows=rule.rows)
+            rows = min(rule.max_rows, rows + queued)
+        return self.allocator.request_for_rows(rows, floor=res.n_devices)
 
     def _worker(self):
         while not self._stop.is_set():
@@ -140,12 +221,13 @@ class AsyncExecutor:
                 self._wake.wait(timeout=0.01)
                 self._wake.clear()
                 continue
-            sub = self.allocator.request(task.resources.n_devices,
-                                         task.resources.preferred_shape)
+            sub = self._allocate(task)
             if sub is None:  # raced; try again later
                 self.queue.push(task)
                 continue
-            members, payload = self._coalesce_members(task)
+            self._track([task], sub)
+            members, payload = self._coalesce_members(task, sub)
+            sub = self._maybe_regrow(task, sub, members)
             t0 = time.monotonic()
             for m in members:
                 m.set_state(TaskState.SCHEDULED)

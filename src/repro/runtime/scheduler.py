@@ -66,6 +66,16 @@ class TaskQueue:
                 i += 1
         return taken
 
+    def matching_rows(self, pred: Callable[[Task], bool],
+                      rows: Optional[Callable[[Task], int]] = None) -> int:
+        """Sum the batch-row footprint of queued tasks satisfying ``pred``
+        *without* removing them — the executor peeks this before allocating
+        so a row-proportional sub-mesh is sized for the rows the dispatch is
+        about to coalesce, not just the task that was popped."""
+        with self._lock:
+            return sum((rows(t) if rows is not None else 1)
+                       for t in self._items if pred(t))
+
     def remove(self, uid: int) -> Optional[Task]:
         with self._lock:
             for i, t in enumerate(self._items):

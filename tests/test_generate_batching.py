@@ -1,0 +1,397 @@
+"""Continuous-batching tests for the generate stage: protocol equivalence
+of the batched path vs the seed per-pipeline path, per-row sampling
+reproducibility under fusion, rolling-admission coalescing, row-proportional
+allocator shapes, and coordinator reporting."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
+                        ProteinPayload, ResourceRequest, Task, TaskState)
+from repro.core.payload import gen_batch_log
+from repro.runtime import (AsyncExecutor, CoalesceRule, DeviceAllocator,
+                           bucket_rows)
+
+
+def proto(**kw):
+    kw.setdefault("n_candidates", 6)
+    kw.setdefault("n_cycles", 3)
+    kw.setdefault("gen_devices", 1)
+    kw.setdefault("predict_devices", 1)
+    kw.setdefault("max_reselections", 3)
+    return ImpressProtocol(ProtocolConfig(**kw))
+
+
+def new_pl(p, name="X"):
+    return p.new_pipeline(name, np.zeros((30, 16), np.float32),
+                          np.zeros(16, np.float32), 24,
+                          np.arange(1, 7, dtype=np.int32))
+
+
+def gen_result(n=6):
+    seqs = np.stack([np.full(24, i, np.int32) for i in range(n)])
+    lls = -np.arange(n, dtype=np.float32)
+    return seqs, lls
+
+
+def scripted_metrics(cycle, cand_idx):
+    rng = np.random.default_rng(1000 * cycle + cand_idx)
+    return {"plddt": 40.0 + 40.0 * rng.random(),
+            "ptm": float(rng.random()),
+            "pae": 5.0 + 20.0 * rng.random()}
+
+
+def drive(p, pl, n_candidates=6):
+    """Host-side protocol loop with scripted payload results, speaking all
+    four task-kind contracts; returns the full event sequence."""
+    events = []
+    tasks = [p.first_task(pl)]
+    while tasks and pl.active:
+        t = tasks.pop(0)
+        if t.kind == "generate":
+            tasks += p.on_generate_done(pl, gen_result(n_candidates))
+        elif t.kind == "generate_batch":
+            assert np.asarray(t.payload["backbones"]).shape[0] == 1
+            tasks += p.on_generate_batch_done(
+                pl, {"rows": [gen_result(n_candidates)]})
+        elif t.kind == "predict":
+            m = scripted_metrics(pl.cycle, pl.meta["cand_idx"])
+            out = p.on_predict_done(pl, m)
+            events += out["events"]
+            tasks += out["tasks"]
+        elif t.kind == "predict_batch":
+            k = t.payload["sequences"].shape[0]
+            i0 = pl.meta["cand_idx"]
+            rows = [scripted_metrics(pl.cycle, i0 + r) for r in range(k)]
+            out = p.on_predict_batch_done(pl, {"rows": rows})
+            events += out["events"]
+            tasks += out["tasks"]
+    return events
+
+
+# ---------------------------------------------------------------------------
+# protocol equivalence
+# ---------------------------------------------------------------------------
+
+def test_generate_batch_size1_reproduces_seed_event_sequence():
+    """Acceptance: generate_batch_size=1 (and any size — the protocol
+    always submits one row per pipeline) reproduces the seed per-pipeline
+    event sequence bit-for-bit, for both predict paths."""
+    for seed in range(4):
+        for score_batch in (0, 4):
+            p_seed = proto(seed=seed, generate_batch_size=0,
+                           score_batch=score_batch)
+            p_gb = proto(seed=seed, generate_batch_size=1,
+                         score_batch=score_batch)
+            pl_seed, pl_gb = new_pl(p_seed), new_pl(p_gb)
+            assert p_seed.first_task(pl_seed).kind == "generate"
+            assert p_gb.first_task(pl_gb).kind == "generate_batch"
+            ev_seed = drive(p_seed, pl_seed)
+            ev_gb = drive(p_gb, pl_gb)
+            assert ev_seed == ev_gb
+            assert pl_seed.cycle == pl_gb.cycle
+            assert pl_seed.meta["trajectories"] == pl_gb.meta["trajectories"]
+            assert [h["cand_idx"] for h in pl_seed.history] == \
+                   [h["cand_idx"] for h in pl_gb.history]
+            np.testing.assert_allclose(pl_seed.meta["backbone"],
+                                       pl_gb.meta["backbone"])
+
+
+def test_generate_batch_task_shape_and_control_clamp():
+    p = proto(generate_batch_size=8, seed=3)
+    pl = new_pl(p)
+    t = p.first_task(pl)
+    assert t.kind == "generate_batch"
+    assert np.asarray(t.payload["backbones"]).shape == (1, 30, 16)
+    assert list(t.payload["seeds"]) == [p.cfg.seed + 1000 * pl.uid]
+    assert t.resources.rows == 1 and t.resources.n_devices == 1
+    # CONT-V control stays on the sequential seed path
+    ctrl = proto(adaptive=False, generate_batch_size=8)
+    assert ctrl.first_task(new_pl(ctrl)).kind == "generate"
+
+
+# ---------------------------------------------------------------------------
+# payload: per-row keying makes fusion invisible to each pipeline
+# ---------------------------------------------------------------------------
+
+def test_fused_generate_rows_match_solo_rows():
+    """A pipeline's samples are identical whether its row runs alone or
+    stacked with other pipelines' rows — coalescing cannot perturb
+    results. Pad rows (R=3 -> bucket 4) don't leak into real rows."""
+    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=12)
+    alloc = DeviceAllocator(jax.devices())
+    sub = alloc.request(1)
+    rng = np.random.default_rng(0)
+    bbs = rng.normal(size=(3, 16, 16)).astype(np.float32)
+    gen_batch_log.clear()
+    fused = payload.generate_batch(sub, {
+        "backbones": bbs, "seeds": [11, 12, 13], "n": 3, "length": 12})
+    assert len(fused["rows"]) == 3
+    assert fused["batch"]["bucket"] == 4 and fused["batch"]["rows"] == 3
+    assert abs(fused["batch"]["occupancy"] - 0.75) < 1e-9
+    assert gen_batch_log and gen_batch_log[-1]["bucket"] == 4
+    for r in range(3):
+        solo = payload.generate_batch(sub, {
+            "backbones": bbs[r][None], "seeds": [11 + r],
+            "n": 3, "length": 12})
+        np.testing.assert_array_equal(solo["rows"][0][0], fused["rows"][r][0])
+        np.testing.assert_allclose(solo["rows"][0][1], fused["rows"][r][1],
+                                   rtol=1e-5, atol=1e-5)
+    # same bucket -> same compiled executable (R=4 reuses the pad-to-4 one)
+    n_before = len([k for k in payload._cache
+                    if str(k[0]).startswith("generate_b")])
+    payload.generate_batch(sub, {
+        "backbones": rng.normal(size=(4, 16, 16)).astype(np.float32),
+        "seeds": [1, 2, 3, 4], "n": 3, "length": 12})
+    n_after = len([k for k in payload._cache
+                   if str(k[0]).startswith("generate_b")])
+    assert n_after == n_before
+    alloc.release(sub)
+
+
+# ---------------------------------------------------------------------------
+# executor: rolling admission
+# ---------------------------------------------------------------------------
+
+def _toy_rule(max_rows=8, window=0.0):
+    return CoalesceRule(
+        key=lambda t: 0,
+        merge=lambda ts: {"xs": [x for t in ts for x in t.payload["xs"]]},
+        split=lambda ts, res: [
+            {"rows": res["rows"][sum(len(u.payload["xs"]) for u in ts[:i]):
+                                 sum(len(u.payload["xs"]) for u in ts[:i + 1])]}
+            for i in range(len(ts))],
+        rows=lambda t: len(t.payload["xs"]),
+        max_rows=max_rows, admission_window=window)
+
+
+def test_rolling_admission_late_task_joins_open_batch():
+    """A compatible task queued *after* the leader was dequeued still joins
+    the dispatch during the admission window, and the window closes early
+    once max_rows is reached."""
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    calls = []
+    ex.register("gb", lambda sm, p: (calls.append(list(p["xs"])),
+                                     {"rows": [x * 10 for x in p["xs"]]})[1])
+    ex.register_coalescable("gb", _toy_rule(max_rows=2, window=2.0))
+    a = Task(kind="gb", payload={"xs": [1]})
+    ex.submit(a)
+    time.sleep(0.15)           # leader dequeued, door open
+    b = Task(kind="gb", payload={"xs": [2]})
+    t0 = time.monotonic()
+    ex.submit(b)
+    done = [ex.drain(timeout=10) for _ in range(2)]
+    closed_after = time.monotonic() - t0
+    ex.shutdown()
+    by_uid = {t.uid: t for t in done if t is not None}
+    assert by_uid[a.uid].result["rows"] == [10]
+    assert by_uid[b.uid].result["rows"] == [20]
+    assert calls == [[1, 2]]   # one fused dispatch
+    st = ex.coalesce_stats()
+    assert st["fused_dispatches"] == 1 and st["tasks_fused"] == 2
+    # budget full at 2 rows -> closed well before the 2s window elapsed
+    assert closed_after < 1.5
+
+
+def test_cancel_reaches_task_in_open_admission_window():
+    """A task assembling inside its admission window has left the queue but
+    not yet run; cancel() must still reach it (via the running registry)
+    instead of silently no-opping."""
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    ex.register("gb", lambda sm, p: {"rows": list(p["xs"])})
+    ex.register_coalescable("gb", _toy_rule(max_rows=8, window=0.5))
+    t = Task(kind="gb", payload={"xs": [1]})
+    ex.submit(t)
+    time.sleep(0.1)            # leader dequeued, door open
+    ex.cancel(t.uid)
+    done = ex.drain(timeout=10)
+    ex.shutdown()
+    assert done.uid == t.uid and done.state == TaskState.CANCELED
+
+
+def test_admission_window_zero_keeps_dequeue_time_coalescing_only():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    calls = []
+    ex.register("gb", lambda sm, p: (calls.append(list(p["xs"])),
+                                     {"rows": list(p["xs"])})[1])
+    ex.register_coalescable("gb", _toy_rule(max_rows=8, window=0.0))
+    ex.submit(Task(kind="gb", payload={"xs": [1]}))
+    assert ex.drain(timeout=10).state == TaskState.DONE
+    time.sleep(0.05)
+    ex.submit(Task(kind="gb", payload={"xs": [2]}))
+    assert ex.drain(timeout=10).state == TaskState.DONE
+    ex.shutdown()
+    assert calls == [[1], [2]]  # two solo dispatches, no waiting
+
+
+# ---------------------------------------------------------------------------
+# allocator: row-proportional shapes
+# ---------------------------------------------------------------------------
+
+class FakeDev:
+    _n = 0
+
+    def __init__(self):
+        FakeDev._n += 1
+        self.id = FakeDev._n
+
+
+def fake_grid(n):
+    return np.array([FakeDev() for _ in range(n)], dtype=object)
+
+
+def test_grant_scales_with_bucketed_rows():
+    alloc = DeviceAllocator(fake_grid(8))
+    assert alloc.grant_for_rows(1) == 1
+    assert alloc.grant_for_rows(3) == 4      # bucket 4
+    assert alloc.grant_for_rows(8) == 8
+    assert alloc.grant_for_rows(100) == 8    # capped by the pool
+    assert alloc.grant_for_rows(1, floor=2) == 2
+
+
+def test_request_for_rows_shrinks_under_pressure_and_logs_shapes():
+    alloc = DeviceAllocator(fake_grid(8))
+    big = alloc.request_for_rows(16)
+    assert big.n_devices == 8
+    alloc.release(big)
+    hog = alloc.request(6)                    # pressure: only 2 free
+    sub = alloc.request_for_rows(16)
+    assert sub.n_devices == 2                 # halved 8 -> 4 -> 2
+    assert alloc.request_for_rows(4, floor=4) is None  # floor can't fit
+    st = alloc.shape_stats()
+    assert st["grants"] == 2 and st["downsized"] == 1
+    assert st["mean_granted"] == 5.0
+    alloc.release(hog)
+    alloc.release(sub)
+
+
+def test_executor_sizes_grant_for_rows_about_to_coalesce():
+    """A row-carrying coalescable task gets a sub-mesh proportional to its
+    own rows plus the queued compatible rows it will fuse."""
+    alloc = DeviceAllocator(fake_grid(8))
+    ex = AsyncExecutor(alloc, max_workers=1)
+    gate = threading.Event()
+    seen = []
+
+    def gb(sm, p):
+        seen.append(sm.n_devices)
+        return {"rows": list(p["xs"])}
+
+    ex.register("blocker", lambda sm, p: gate.wait(timeout=10))
+    ex.register("gb", gb)
+    ex.register_coalescable("gb", _toy_rule(max_rows=8))
+    ex.submit(Task(kind="blocker", payload={}))
+    time.sleep(0.1)
+    for i in range(4):
+        ex.submit(Task(kind="gb", payload={"xs": [i]},
+                       resources=ResourceRequest(n_devices=1, rows=1)))
+    gate.set()
+    done = [ex.drain(timeout=10) for _ in range(5)]
+    ex.shutdown()
+    assert sum(1 for t in done
+               if t is not None and t.state == TaskState.DONE) == 5
+    # 4 fused rows -> bucket 4 -> 4-device grant (pool of 8, 1 on blocker)
+    assert seen == [4]
+    assert alloc.shape_stats()["grants"] == 1
+    assert bucket_rows(4) == 4
+
+
+def test_rolling_admission_regrows_submesh_for_late_rows():
+    """In the continuous steady state the leader is granted before any
+    compatible work is queued; once late rows join during the admission
+    window the allocation must be upgraded to match the fused batch."""
+    alloc = DeviceAllocator(fake_grid(8))
+    ex = AsyncExecutor(alloc, max_workers=1)
+    seen = []
+
+    def gb(sm, p):
+        seen.append(sm.n_devices)
+        return {"rows": list(p["xs"])}
+
+    ex.register("gb", gb)
+    ex.register_coalescable("gb", _toy_rule(max_rows=4, window=2.0))
+    ex.submit(Task(kind="gb", payload={"xs": [0]},
+                   resources=ResourceRequest(n_devices=1, rows=1)))
+    time.sleep(0.15)           # leader dequeued on a 1-device grant
+    for i in range(1, 4):
+        ex.submit(Task(kind="gb", payload={"xs": [i]},
+                       resources=ResourceRequest(n_devices=1, rows=1)))
+    done = [ex.drain(timeout=10) for _ in range(4)]
+    ex.shutdown()
+    assert all(t is not None and t.state == TaskState.DONE for t in done)
+    assert seen == [4]         # regrown from 1 device to bucket(4) = 4
+    assert alloc.n_free == 8   # both grants released
+
+
+def test_register_all_bounds_generate_batch_rows():
+    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=12)
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    payload.register_all(ex, generate_batch_rows=2)
+    assert ex._coalesce["generate_batch"].max_rows == 2
+    ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# coordinator: end-to-end batched generation + reporting
+# ---------------------------------------------------------------------------
+
+class FakeGenBatchPayload:
+    """Instant deterministic payloads speaking every task-kind contract."""
+
+    def __init__(self):
+        self.rng = np.random.default_rng(0)
+        self.n_gen_dispatches = 0
+
+    def _sample(self, n, L):
+        seqs = self.rng.integers(1, 21, size=(n, L)).astype(np.int32)
+        return seqs, -self.rng.random(n).astype(np.float32)
+
+    def generate(self, sm, payload):
+        return self._sample(payload["n"], payload["length"])
+
+    def generate_batch(self, sm, payload):
+        self.n_gen_dispatches += 1
+        bbs = np.asarray(payload["backbones"])
+        R = 1 if bbs.ndim == 2 else bbs.shape[0]
+        rows = [self._sample(payload["n"], payload["length"])
+                for _ in range(R)]
+        return {"rows": rows,
+                "batch": {"rows": R, "bucket": bucket_rows(R),
+                          "occupancy": R / bucket_rows(R)}}
+
+    def predict(self, sm, payload):
+        return {"plddt": 40.0 + float(np.mean(payload["sequence"])),
+                "ptm": 0.5, "pae": 15.0}
+
+
+def test_coordinator_batched_generation_run_and_report():
+    from repro.core.payload import generate_batch_coalesce_rule
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    fp = FakeGenBatchPayload()
+    ex.register("generate", fp.generate)
+    ex.register("generate_batch", fp.generate_batch)
+    ex.register("predict", fp.predict)
+    ex.register_coalescable("generate_batch", generate_batch_coalesce_rule(
+        max_rows=4, admission_window=0.01))
+    p = proto(generate_batch_size=4, n_cycles=2, max_sub_pipelines=2)
+    coord = Coordinator(ex, p)
+    for i in range(3):
+        coord.add_pipeline(new_pl(p, f"S{i}"))
+    rep = coord.run(timeout=60)
+    ex.shutdown()
+    assert rep["n_pipelines"] == 3
+    assert rep["executor"]["n_failed"] == 0
+    assert rep["n_generate_batches"] >= 1
+    assert rep["gen_batch_occupancy"] is not None
+    assert 0.0 < rep["gen_batch_occupancy"] <= 1.0
+    assert "allocator_shapes" in rep
+    evs = [e["event"] for e in rep["events"]]
+    assert evs.count("completed") + evs.count("pruned") >= 3

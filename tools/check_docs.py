@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Docs consistency checks (CI `docs` job, also runnable locally):
+
+  1. every internal markdown link in README.md / docs/ARCHITECTURE.md
+     resolves to an existing file or directory, and
+  2. the tier-1 verify command shown in README.md is exactly the one
+     ROADMAP.md declares.
+
+  python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/ARCHITECTURE.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+VERIFY_RE = re.compile(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`")
+
+
+def internal_links(md_path: Path):
+    for target in LINK_RE.findall(md_path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#")[0]
+
+
+def main() -> int:
+    errors = []
+    for rel in DOCS:
+        doc = ROOT / rel
+        if not doc.exists():
+            errors.append(f"{rel}: missing")
+            continue
+        for target in internal_links(doc):
+            if not (doc.parent / target).resolve().exists():
+                errors.append(f"{rel}: broken internal link -> {target}")
+
+    m = VERIFY_RE.search((ROOT / "ROADMAP.md").read_text())
+    if m is None:
+        errors.append("ROADMAP.md: no **Tier-1 verify:** `...` line")
+    else:
+        cmd = m.group(1)
+        if cmd not in (ROOT / "README.md").read_text():
+            errors.append(
+                f"README.md: tier-1 verify command does not match "
+                f"ROADMAP.md ({cmd!r})")
+
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        n = sum(len(list(internal_links(ROOT / d))) for d in DOCS)
+        print(f"check_docs: OK ({n} internal links, verify command in sync)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
