@@ -12,7 +12,7 @@ def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3")
+BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution")
 
 
 def main() -> None:
@@ -39,6 +39,9 @@ def main() -> None:
     if "fig3" in only:
         from benchmarks import fig3_expansion
         fig3_expansion.main(emit)
+    if "evolution" in only:
+        from benchmarks import bench_evolution
+        bench_evolution.main(emit)
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

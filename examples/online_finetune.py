@@ -1,8 +1,9 @@
 """The paper's §V vision, runnable: "evaluate as you go" with bidirectional
-AI<->HPC coupling — accepted designs from the IMPRESS loop fine-tune the
-generator *through the same middleware* (a ``finetune`` task scheduled on
-the pilot alongside generate/predict tasks), and the evolved generator
-drives the next design round.
+AI<->HPC coupling — accepted designs from the IMPRESS loop feed a replay
+buffer, a trainer service finetunes the generator on idle devices *through
+the same middleware* (preemptible ``finetune`` tasks scheduled on the pilot
+alongside generate/predict tasks), and evolved params hot-swap into the
+generators mid-run via the versioned ParamStore.
 
   PYTHONPATH=src python examples/online_finetune.py
 """
@@ -15,27 +16,11 @@ import jax          # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,  # noqa: E402
-                        ProteinPayload, ResourceRequest, Task, TaskState)
+                        ProteinPayload)
 from repro.core.payload import FinetunePayload  # noqa: E402
 from repro.data import protein_design_tasks  # noqa: E402
+from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService  # noqa: E402
 from repro.runtime import AsyncExecutor, DeviceAllocator  # noqa: E402
-
-
-def design_round(executor, payload, tasks, n_cycles=2, seed=0):
-    proto = ImpressProtocol(ProtocolConfig(
-        n_candidates=5, n_cycles=n_cycles, adaptive=True, gen_devices=2,
-        predict_devices=1, max_sub_pipelines=2, seed=seed))
-    coord = Coordinator(executor, proto)
-    for t in tasks:
-        coord.add_pipeline(proto.new_pipeline(
-            t["name"], t["backbone"], t["target"], t["receptor_len"],
-            t["peptide_tokens"]))
-    rep = coord.run(timeout=300)
-    designs = []
-    for pl in coord.pipelines.values():
-        for h in pl.history:
-            designs.append((h["backbone"], h["sequence"], h["fitness"]))
-    return rep, designs
 
 
 def main():
@@ -44,39 +29,40 @@ def main():
     ex = AsyncExecutor(alloc, max_workers=4)
     payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=20)
     payload.register_all(ex)
-    tuner = FinetunePayload(payload, lr=3e-4, steps=15)
-    tuner.register(ex)
+    FinetunePayload(payload, lr=3e-4, steps=15).register(ex)
 
-    print("== round 1: design with the untuned generator ==")
-    rep1, designs = design_round(ex, payload, tasks, seed=0)
-    fits = np.array([d[2] for d in designs])
-    print(f"  accepted designs: {len(designs)}, "
-          f"fitness median {np.median(fits):.3f}")
+    buffer = ReplayBuffer(capacity=64)
+    trainer = TrainerService(ex, buffer, payload.param_store,
+                             EvolutionConfig(finetune_every=2, min_designs=2,
+                                             batch_size=8, steps=15))
 
-    print("== finetune task: evolve the generator on accepted designs ==")
-    L = min(len(d[1]) for d in designs)
-    ft = Task(kind="finetune", payload={
-        "backbones": np.stack([np.asarray(d[0], np.float32)
-                               for d in designs]),
-        "sequences": np.stack([np.asarray(d[1][:L], np.int32)
-                               for d in designs]),
-        "weights": np.maximum(fits, 1e-3),
-    }, resources=ResourceRequest(n_devices=1))
-    ex.submit(ft)
-    done = None
-    while done is None or done.uid != ft.uid:
-        done = ex.drain(timeout=120)
-        assert done is not None, "finetune timed out"
-    assert done.state == TaskState.DONE, done.error
-    print(f"  weighted NLL {done.result['loss_first']:.4f} -> "
-          f"{done.result['loss_last']:.4f} on {done.result['n_designs']} designs")
+    print("== design with online model evolution ==")
+    proto = ImpressProtocol(ProtocolConfig(
+        n_candidates=5, n_cycles=3, adaptive=True, gen_devices=2,
+        predict_devices=1, max_sub_pipelines=2, seed=0))
+    coord = Coordinator(ex, proto, trainer=trainer)
+    for t in tasks:
+        coord.add_pipeline(proto.new_pipeline(
+            t["name"], t["backbone"], t["target"], t["receptor_len"],
+            t["peptide_tokens"]))
+    rep = coord.run(timeout=300)
 
-    print("== round 2: design with the evolved generator ==")
-    rep2, designs2 = design_round(ex, payload, tasks, seed=1)
-    fits2 = np.array([d[2] for d in designs2])
-    print(f"  accepted designs: {len(designs2)}, "
-          f"fitness median {np.median(fits2):.3f}")
-    print(f"\nutilization across all three phases: "
+    evo = rep["evolution"]
+    print(f"  accepted designs buffered: {evo['buffer']['size']} "
+          f"(mean fitness {evo['buffer']['mean_fitness']:.3f})")
+    print(f"  finetunes: {evo['completed']} completed, "
+          f"{evo['preempted']} preempted, generator now at "
+          f"version {evo['param_version']}")
+    for ft in evo["finetunes"]:
+        print(f"    v{ft['base_version']} -> v{ft['new_version']}: "
+              f"weighted NLL {ft['loss_first']:.3f} -> {ft['loss_last']:.3f} "
+              f"on {ft['n_designs']} designs")
+    print("  design quality by generator version:")
+    for v, q in rep["quality_by_version"].items():
+        print(f"    v{v}: {q['n']} accepted, "
+              f"fitness median {q['fitness_median']:.3f}")
+    print(f"\ntrainer utilization {100 * evo['trainer_utilization']:.0f}% of "
+          f"pilot device-seconds, pilot utilization "
           f"{100 * alloc.utilization():.0f}% — generate/predict/finetune "
           f"tasks share one pilot (the paper's concurrent AI+HPC coupling)")
     ex.shutdown()

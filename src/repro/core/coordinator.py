@@ -16,6 +16,14 @@ batch; the coordinator routes them to the protocol's ``on_*_batch_done``
 handlers and tracks bucket occupancy per dispatch leader, reported alongside
 the allocator's row-proportional shape stats.
 
+Model evolution (paper §V): with a ``TrainerService`` attached, every
+accepted design is fed to the replay buffer, the trainer is ticked each
+loop iteration (it submits preemptible ``finetune`` tasks only when the
+middleware is idle), and trainer-task completions are routed back to the
+service — they never touch pipeline/inflight accounting, so a disabled or
+absent trainer leaves the design run byte-identical. ``report`` surfaces
+design quality grouped by generator version plus trainer utilization.
+
 The coordinator state (trajectory pool, per-pipeline history) is
 JSON-serializable via ``state_dict`` for checkpoint/restart.
 """
@@ -34,9 +42,10 @@ from repro.runtime.executor import AsyncExecutor
 
 class Coordinator:
     def __init__(self, executor: AsyncExecutor, protocol: ImpressProtocol,
-                 *, max_inflight: Optional[int] = None):
+                 *, max_inflight: Optional[int] = None, trainer=None):
         self.executor = executor
         self.protocol = protocol
+        self.trainer = trainer               # learn.TrainerService or None
         self.max_inflight = max_inflight     # None = unbounded (IM-RP)
         self.pipelines: Dict[int, Pipeline] = {}
         self._task_pipeline: Dict[int, int] = {}
@@ -92,9 +101,11 @@ class Coordinator:
                 sub.cycle = spawn.get("cycle", 0)
                 if spawn.get("prev_fitness") is not None:
                     sub.meta["prev_fitness"] = spawn["prev_fitness"]
+                sub.meta["gen_version"] = spawn.get("gen_version", 0)
                 self.protocol.register_sub_spawn()
                 self.events.append({"t": time.monotonic(), "event": "spawn",
-                                    "pipeline": sub.name})
+                                    "pipeline": sub.name,
+                                    "gen_version": sub.meta["gen_version"]})
                 self.add_pipeline(sub)
             else:
                 still.append(spawn)
@@ -163,10 +174,17 @@ class Coordinator:
                 self.events.append({"t": time.monotonic(),
                                     "event": ev["event"],
                                     "pipeline": pl.name,
-                                    "cycle": ev["cycle"]})
+                                    "cycle": ev["cycle"],
+                                    "gen_version": pl.meta.get(
+                                        "gen_version", 0)})
             for t in out["tasks"]:
                 t.pipeline_id = pl.uid
                 self._enqueue(t)
+            # accepted designs are the §V training data: feed the replay
+            # buffer ("completed" is the final accepted cycle)
+            if self.trainer is not None and pl.history \
+                    and out["event"] in ("accepted", "completed"):
+                self.trainer.add_design(pl.history[-1])
             self._try_spawn(out["spawn"])
 
     # -- main loop --------------------------------------------------------------
@@ -174,13 +192,21 @@ class Coordinator:
     def run(self, timeout: float = 600.0) -> dict:
         t0 = time.monotonic()
         while time.monotonic() - t0 < timeout:
+            if self.trainer is not None:
+                self.trainer.tick()   # opportunistic model evolution
             active = any(p.active for p in self.pipelines.values())
-            if not active and self._inflight == 0 and not self._ready:
+            if not active and self._inflight == 0 and not self._ready \
+                    and (self.trainer is None or not self.trainer.busy()):
                 break
             task = self.executor.drain(timeout=0.05)
             if task is None:
                 if self._inflight == 0 and self._ready:
                     self._pump()
+                continue
+            if self.trainer is not None and self.trainer.owns(task.uid):
+                # trainer-task completion: routed to the service, never
+                # counted against pipeline inflight
+                self.trainer.on_complete(task)
                 continue
             if task.speculative_of is None:
                 self._inflight -= 1
@@ -190,6 +216,21 @@ class Coordinator:
         return self.report(makespan=time.monotonic() - t0)
 
     # -- reporting ------------------------------------------------------------
+
+    def _quality_by_version(self) -> Dict[int, dict]:
+        """Accepted-design quality grouped by the generator version that
+        produced each design — the paper's 'increased consistency in the
+        quality of protein design' measured directly against evolution."""
+        by_v: Dict[int, List[float]] = {}
+        for p in self.pipelines.values():
+            for h in p.history:
+                by_v.setdefault(int(h.get("gen_version", 0)), []).append(
+                    float(h["fitness"]))
+        return {v: {"n": len(fs),
+                    "fitness_median": float(np.median(fs)),
+                    "fitness_mean": float(np.mean(fs)),
+                    "fitness_std": float(np.std(fs))}
+                for v, fs in sorted(by_v.items())}
 
     def report(self, makespan: float) -> dict:
         pls = list(self.pipelines.values())
@@ -226,6 +267,12 @@ class Coordinator:
                                     if self._gen_occupancy else None),
             "n_generate_batches": len(self._gen_occupancy),
             "allocator_shapes": self.executor.allocator.shape_stats(),
+            "quality_by_version": self._quality_by_version(),
+            "evolution": (None if self.trainer is None else
+                          self.trainer.report(
+                              makespan=makespan,
+                              total_devices=self.executor
+                              .allocator.total_devices)),
             "cycles": cycles,
             "events": self.events,
         }

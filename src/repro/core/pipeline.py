@@ -55,6 +55,11 @@ class Task:
     retries: int = 0
     speculative_of: Optional[int] = None  # straggler-mitigation duplicate
     canceled: bool = False
+    preemptible: bool = False   # trainer-class task: held back while design
+    #   work queues (scheduler aging guard excepted) and asked to yield its
+    #   sub-mesh when a design task cannot fit (executor preemption)
+    preempt_requested: bool = False  # cooperative yield signal: the payload
+    #   fn checks this between steps and returns early with resume state
 
     def set_state(self, state: TaskState):
         self.state = state

@@ -110,6 +110,8 @@ class ImpressProtocol:
             "cand_idx": 0,
             "reselections": 0,
             "trajectories": 0,
+            "gen_version": 0,         # generator version that produced the
+            #   current candidates (provenance; updated per generate result)
         })
         if seed_candidate is not None:
             pl.meta["candidates"] = seed_candidate
@@ -194,7 +196,13 @@ class ImpressProtocol:
     # -- completions ---------------------------------------------------------
 
     def on_generate_done(self, pl: Pipeline, result) -> List[Task]:
-        """Stages 2+3: rank by LL (adaptive) or shuffle (control)."""
+        """Stages 2+3: rank by LL (adaptive) or shuffle (control).
+        ``result`` is either the legacy (seqs, lls) tuple or a dict
+        {"seqs", "lls", "gen_version"} — the dict form records which
+        generator version produced the candidates (provenance)."""
+        if isinstance(result, dict):
+            pl.meta["gen_version"] = int(result.get("gen_version", 0))
+            result = (result["seqs"], result["lls"])
         seqs, lls = result                    # (n,L), (n,)
         order = (np.argsort(-lls) if self.cfg.adaptive
                  else np.random.default_rng(self.cfg.seed + pl.uid
@@ -213,6 +221,8 @@ class ImpressProtocol:
             raise ValueError(
                 f"pipeline {pl.uid} expected its own generate_batch row, "
                 f"got {len(rows)}")
+        if isinstance(result, dict) and "gen_version" in result:
+            pl.meta["gen_version"] = int(result["gen_version"])
         seqs, lls = rows[0]
         return self.on_generate_done(pl, (seqs, lls))
 
@@ -282,7 +292,8 @@ class ImpressProtocol:
             metrics, fitness=fit, cycle=pl.cycle,
             cand_idx=pl.meta["cand_idx"],
             sequence=np.asarray(chosen).tolist(),
-            backbone=np.asarray(pl.meta["backbone"]).tolist()))
+            backbone=np.asarray(pl.meta["backbone"]).tolist(),
+            gen_version=int(pl.meta.get("gen_version", 0))))
         pl.meta["prev_fitness"] = fit
         self._update_structure(pl, chosen)
 
@@ -304,6 +315,8 @@ class ImpressProtocol:
                     # sub-pipelines refine: they must beat the parent's
                     # accepted quality, not restart from scratch
                     "prev_fitness": fit,
+                    # seeded candidates inherit the parent's provenance
+                    "gen_version": int(pl.meta.get("gen_version", 0)),
                 }
 
         pl.cycle += 1

@@ -33,6 +33,17 @@ sub-mesh sized by ``DeviceAllocator.request_for_rows`` — proportional to
 the bucketed row count of the dispatch (the popped task's rows plus any
 queued compatible rows it is about to coalesce), with ``n_devices`` as the
 floor — instead of the fixed ``n_devices`` grant.
+
+Preemption (model evolution): tasks marked ``preemptible`` (trainer-class
+work soaking idle devices) run with the live ``Task`` injected into their
+payload as ``payload["_task"]``. When a non-preemptible task cannot be
+allocated — or waits in the queue while preemptible work holds devices —
+the executor sets ``preempt_requested`` on every running preemptible task;
+the payload fn checks the flag between steps and returns early (DONE, with
+resume state in its result), releasing its sub-mesh within one step. The
+scheduler additionally holds queued preemptible tasks back while design
+work waits (see ``TaskQueue``), so trainer tasks never delay a queued
+design task from either direction.
 """
 
 from __future__ import annotations
@@ -71,9 +82,9 @@ class AsyncExecutor:
     def __init__(self, allocator: DeviceAllocator, *, max_workers: int = 8,
                  max_retries: int = 1, backfill: bool = True,
                  straggler_factor: Optional[float] = None,
-                 min_straggler_samples: int = 3):
+                 min_straggler_samples: int = 3, aging_s: float = 60.0):
         self.allocator = allocator
-        self.queue = TaskQueue(backfill=backfill)
+        self.queue = TaskQueue(backfill=backfill, aging_s=aging_s)
         self.completions: "queue.Queue[Task]" = queue.Queue()
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
@@ -84,6 +95,7 @@ class AsyncExecutor:
         self._tasks: Dict[int, Task] = {}
         self._durations: Dict[str, List[float]] = {}
         self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
+        self._preemptions = 0   # preempt_requested signals sent
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._wake = threading.Event()
@@ -111,6 +123,12 @@ class AsyncExecutor:
         task.set_state(TaskState.QUEUED)
         self.queue.push(task)
         self._wake.set()
+        # a design task that cannot fit right now must not wait out running
+        # trainer work — signal at submit time too (the idle-worker check
+        # alone misses the case where every worker stays busy)
+        if not task.preemptible \
+                and not self.allocator.can_fit(task.resources.n_devices):
+            self.preempt_preemptible()
 
     def cancel(self, uid: int):
         t = self.queue.remove(uid)
@@ -123,6 +141,37 @@ class AsyncExecutor:
             entry = self._running.get(uid)
         if entry:
             entry[0].canceled = True  # cooperative
+
+    # -- preemption --------------------------------------------------------
+
+    def preempt_preemptible(self) -> int:
+        """Ask every running preemptible task to yield its sub-mesh.
+        Cooperative: payload fns check their injected
+        ``payload["_task"].preempt_requested`` between steps and return
+        early (DONE, with resume state) — unlike ``cancel``, the partial
+        result is preserved. Returns how many tasks were signalled."""
+        with self._lock:
+            running = [t for t, _, _ in self._running.values()]
+        n = 0
+        for t in running:
+            if t.preemptible and not t.preempt_requested:
+                t.preempt_requested = True
+                n += 1
+        self._preemptions += n
+        return n
+
+    def _preempt_for_queued(self):
+        """Idle-worker guard: if a queued non-preemptible task cannot fit
+        while preemptible work is running (holding the devices it needs),
+        preempt — the design task must not wait out a trainer task."""
+        with self._lock:
+            if not any(t.preemptible for t, _, _ in self._running.values()):
+                return
+        for t in self.queue.snapshot():
+            if not t.preemptible \
+                    and not self.allocator.can_fit(t.resources.n_devices):
+                self.preempt_preemptible()
+                return
 
     # -- worker loop -------------------------------------------------------
 
@@ -218,16 +267,24 @@ class AsyncExecutor:
         while not self._stop.is_set():
             task = self.queue.pop_fitting(self.allocator.can_fit)
             if task is None:
+                self._preempt_for_queued()
                 self._wake.wait(timeout=0.01)
                 self._wake.clear()
                 continue
             sub = self._allocate(task)
             if sub is None:  # raced; try again later
+                if not task.preemptible:
+                    # a design task lost its devices: trainer work yields
+                    self.preempt_preemptible()
                 self.queue.push(task)
                 continue
             self._track([task], sub)
             members, payload = self._coalesce_members(task, sub)
             sub = self._maybe_regrow(task, sub, members)
+            if task.preemptible:
+                # hand the payload fn its live task so it can observe
+                # preempt_requested/canceled between steps
+                payload = dict(payload, _task=task)
             t0 = time.monotonic()
             for m in members:
                 m.set_state(TaskState.SCHEDULED)
@@ -300,6 +357,7 @@ class AsyncExecutor:
                 if (now - t0) > self.straggler_factor * med \
                         and task.speculative_of is None \
                         and not task.canceled \
+                        and not task.preemptible \
                         and self.allocator.can_fit(task.resources.n_devices):
                     dup_ids = [t.speculative_of for t, _, _ in running]
                     if task.uid in dup_ids:
@@ -334,7 +392,8 @@ class AsyncExecutor:
                 task.canceled = True  # cooperative cancel of doomed run
                 clone = Task(kind=task.kind, payload=task.payload,
                              resources=task.resources, priority=task.priority,
-                             pipeline_id=task.pipeline_id)
+                             pipeline_id=task.pipeline_id,
+                             preemptible=task.preemptible)
                 clone.retries = task.retries
                 self.submit(clone)
                 requeued.append(clone)
@@ -372,6 +431,7 @@ class AsyncExecutor:
             "n_failed": sum(1 for t in self._tasks.values()
                             if t.state == TaskState.FAILED),
             "n_retried": sum(t.retries for t in self._tasks.values()),
+            "n_preempted": self._preemptions,
             "utilization": self.allocator.utilization(),
             "mean_exec_setup_s": sum(setup) / len(setup) if setup else 0.0,
             "mean_running_s": sum(run) / len(run) if run else 0.0,

@@ -1,15 +1,22 @@
-"""Task queue with priority + HPC-style backfill.
+"""Task queue with priority + HPC-style backfill + a preemptible class.
 
 FIFO within priority, but when the head task does not fit the currently-free
 devices, a smaller lower-priority task may be *backfilled* ahead of it — the
 mechanism that lets IMPRESS sub-pipelines soak up idle devices while a big
 pipeline waits for a large allocation (the paper's "offloading newly created
 pipelines to the idle resources when possible").
+
+Preemptible (trainer-class) tasks are a second scheduling class: they are
+held back whenever any non-preemptible (design) task is queued — low-priority
+opportunistic work must never delay design work, not even via backfill —
+*unless* they have waited longer than ``aging_s`` (the starvation guard: a
+continuous design load cannot park a trainer task forever).
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from bisect import insort
 from typing import Callable, List, Optional
 
@@ -19,22 +26,33 @@ _order = (lambda t: (t.priority, t.uid))
 
 
 class TaskQueue:
-    def __init__(self, backfill: bool = True):
+    def __init__(self, backfill: bool = True, aging_s: float = 60.0):
         self._items: List[Task] = []
         self._lock = threading.Lock()
         self.backfill = backfill
+        self.aging_s = aging_s
 
     def push(self, task: Task):
         with self._lock:
             insort(self._items, task, key=_order)  # O(n) vs full re-sort
 
+    def _aged(self, task: Task, now: float) -> bool:
+        queued = task.timestamps.get("QUEUED")
+        return queued is not None and (now - queued) >= self.aging_s
+
     def pop_fitting(self, fits: Callable[[int], bool]) -> Optional[Task]:
         """Pop the highest-priority task; if it doesn't fit and backfill is
-        on, pop the first one that does."""
+        on, pop the first one that does. Preemptible tasks are skipped while
+        any non-preemptible task waits, unless aged past ``aging_s``."""
         with self._lock:
             if not self._items:
                 return None
+            now = time.monotonic()
+            design_waiting = any(not t.preemptible for t in self._items)
             for i, task in enumerate(self._items):
+                if task.preemptible and design_waiting \
+                        and not self._aged(task, now):
+                    continue
                 if fits(task.resources.n_devices):
                     return self._items.pop(i)
                 if not self.backfill:

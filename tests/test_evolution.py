@@ -1,0 +1,512 @@
+"""Model-evolution subsystem tests: replay buffer, versioned param store
+(incl. checkpoint round-trip), preemptible scheduling class + aging guard,
+executor-level preemption, the rebuilt data-parallel finetune payload with
+preempt/resume, trainer-service gating, and the disabled-evolution
+equivalence discipline."""
+
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
+                        ProteinPayload, ResourceRequest, Task, TaskState)
+from repro.core.payload import FinetunePayload, _fold_in_keys
+from repro.learn import (EvolutionConfig, ParamStore, ReplayBuffer,
+                         TrainerService)
+from repro.runtime import AsyncExecutor, DeviceAllocator, TaskQueue
+
+# ---------------------------------------------------------------------------
+# replay buffer
+# ---------------------------------------------------------------------------
+
+
+def _design(fit, ver=0, L=8, P=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(backbone=rng.normal(size=(P, 16)).astype(np.float32),
+                sequence=rng.integers(1, 20, size=L).astype(np.int32),
+                fitness=fit, gen_version=ver)
+
+
+def test_buffer_evicts_lowest_fitness_when_full():
+    buf = ReplayBuffer(capacity=3)
+    for i, f in enumerate([0.5, 0.1, 0.9, 0.7]):
+        d = _design(f, seed=i)
+        buf.add(d["backbone"], d["sequence"], d["fitness"])
+    assert len(buf) == 3
+    st = buf.stats()
+    assert st["added"] == 4 and st["evicted"] == 1
+    # 0.1 (the lowest) was evicted
+    assert min(st["mean_fitness"] for _ in [0]) > 0.1
+    batch = buf.sample(3, np.random.default_rng(0))
+    assert batch["sequences"].shape == (3, 8)
+    assert batch["weights"].min() > 0
+
+
+def test_buffer_sampling_is_fitness_weighted():
+    buf = ReplayBuffer(capacity=10)
+    good, bad = _design(5.0, seed=1), _design(0.0, seed=2)
+    buf.add(good["backbone"], good["sequence"], 5.0)
+    buf.add(bad["backbone"], bad["sequence"], 0.0)
+    rng = np.random.default_rng(0)
+    hits = sum(np.array_equal(buf.sample(1, rng)["sequences"][0],
+                              good["sequence"]) for _ in range(50))
+    assert hits > 35  # strongly biased toward the fitter design
+
+
+def test_buffer_groups_mixed_lengths_and_roundtrips():
+    buf = ReplayBuffer(capacity=10)
+    for i in range(3):
+        d = _design(1.0, ver=i % 2, L=8, seed=i)
+        buf.add(d["backbone"], d["sequence"], d["fitness"], d["gen_version"])
+    odd = _design(1.0, L=11, seed=9)
+    buf.add(odd["backbone"], odd["sequence"], 1.0)
+    batch = buf.sample(8, np.random.default_rng(0))
+    assert batch["sequences"].shape == (3, 8)  # modal-length group wins
+    buf2 = ReplayBuffer()
+    buf2.load_state_dict(buf.state_dict())
+    assert len(buf2) == len(buf)
+    assert buf2.stats()["by_gen_version"] == buf.stats()["by_gen_version"]
+
+
+# ---------------------------------------------------------------------------
+# param store
+# ---------------------------------------------------------------------------
+
+
+def test_param_store_publish_retire_and_listeners():
+    store = ParamStore({"w": np.zeros(2)}, keep=2)
+    retired = []
+    store.on_retire(retired.append)
+    assert store.current()[0] == 0
+    v1 = store.publish({"w": np.ones(2)})
+    assert v1 == 1 and store.version == 1
+    assert retired == []                       # keep=2: 0 and 1 both live
+    v2 = store.publish({"w": np.full(2, 2.0)})
+    assert v2 == 2 and retired == [[0]]        # version 0 retired
+    assert store.get(0) is None
+    np.testing.assert_array_equal(store.get(1)["w"], np.ones(2))
+    # hot-swap: a snapshot taken before a publish keeps its params
+    ver, params = store.current()
+    store.publish({"w": np.full(2, 3.0)})
+    assert ver == 2 and float(params["w"][0]) == 2.0
+
+
+def test_param_store_checkpoint_roundtrip():
+    from repro.checkpoint import CheckpointManager
+    store = ParamStore({"a": np.arange(3, dtype=np.float32),
+                        "b": {"c": np.ones((2, 2), np.float32)}})
+    store.publish({"a": np.arange(3, dtype=np.float32) + 5,
+                   "b": {"c": np.full((2, 2), 7.0, np.float32)}})
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        assert store.save(mgr) == 1
+        fresh = ParamStore({"a": np.zeros(3, np.float32),
+                            "b": {"c": np.zeros((2, 2), np.float32)}})
+        assert fresh.restore(mgr) == 1
+        assert fresh.version == 1
+        np.testing.assert_allclose(np.asarray(fresh.current()[1]["a"]),
+                                   np.arange(3) + 5)
+        # publishing continues from the restored version number
+        assert fresh.publish({"a": np.zeros(3, np.float32),
+                              "b": {"c": np.zeros((2, 2), np.float32)}}) == 2
+
+
+def test_param_store_restore_to_older_step_never_reuses_versions():
+    """Restoring an older checkpoint must not re-issue version numbers that
+    were already published (and possibly tombstoned downstream)."""
+    from repro.checkpoint import CheckpointManager
+    p = lambda x: {"w": np.full(2, float(x), np.float32)}
+    store = ParamStore(p(0))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        store.publish(p(1))
+        store.save(mgr)                  # checkpoint at version 1
+        store.publish(p(2))
+        store.publish(p(3))
+        assert store.restore(mgr, step=1) == 1
+        assert store.version == 1
+        np.testing.assert_allclose(np.asarray(store.current()[1]["w"]), 1.0)
+        # next publish continues past the highest version ever issued
+        assert store.publish(p(9)) == 4
+
+
+# ---------------------------------------------------------------------------
+# scheduler: preemptible class + aging guard
+# ---------------------------------------------------------------------------
+
+
+def _queued(task):
+    task.set_state(TaskState.QUEUED)
+    return task
+
+
+def test_preemptible_held_back_while_design_work_queued():
+    q = TaskQueue(backfill=True, aging_s=60.0)
+    trainer = _queued(Task(kind="ft", payload={}, priority=100,
+                           preemptible=True,
+                           resources=ResourceRequest(1)))
+    q.push(trainer)
+    # alone in the queue: pops freely
+    assert q.pop_fitting(lambda n: n <= 1).uid == trainer.uid
+    q.push(trainer)
+    design = _queued(Task(kind="gen", payload={},
+                          resources=ResourceRequest(1)))
+    q.push(design)
+    # design work queued: the trainer must not pop, not even via backfill
+    got = q.pop_fitting(lambda n: n <= 1)
+    assert got.uid == design.uid
+    big = _queued(Task(kind="gen", payload={}, resources=ResourceRequest(8)))
+    q.push(big)
+    # the waiting design task doesn't fit -> nothing pops (trainer held)
+    assert q.pop_fitting(lambda n: n <= 1) is None
+
+
+def test_aging_guard_unparks_starved_trainer_task():
+    q = TaskQueue(backfill=True, aging_s=0.05)
+    big = _queued(Task(kind="gen", payload={}, resources=ResourceRequest(8)))
+    trainer = _queued(Task(kind="ft", payload={}, priority=100,
+                           preemptible=True,
+                           resources=ResourceRequest(1)))
+    q.push(big)
+    q.push(trainer)
+    assert q.pop_fitting(lambda n: n <= 1) is None   # not aged yet
+    time.sleep(0.06)
+    got = q.pop_fitting(lambda n: n <= 1)             # aged: backfills
+    assert got is not None and got.uid == trainer.uid
+
+
+# ---------------------------------------------------------------------------
+# executor: preemption never lets a trainer delay a queued design task
+# ---------------------------------------------------------------------------
+
+
+def test_executor_preempts_running_trainer_for_design_task():
+    """Acceptance (executor level): a running preemptible trainer task
+    yields its sub-mesh as soon as a design task queues; the design task is
+    never made to wait the trainer out, and the trainer completes DONE with
+    its partial (resume-able) result preserved."""
+    alloc = DeviceAllocator(jax.devices())    # 1 CPU device
+    ex = AsyncExecutor(alloc, max_workers=2)
+    started = threading.Event()
+
+    def trainer_fn(sm, p):
+        t = p["_task"]
+        started.set()
+        for step in range(400):               # ~4 s if never preempted
+            if t.preempt_requested:
+                return {"preempted": True, "steps_done": step}
+            time.sleep(0.01)
+        return {"preempted": False, "steps_done": 400}
+
+    ex.register("ft", trainer_fn)
+    ex.register("design", lambda sm, p: "designed")
+    ft = Task(kind="ft", payload={}, priority=100, preemptible=True,
+              resources=ResourceRequest(1))
+    ex.submit(ft)
+    assert started.wait(timeout=5)
+    t0 = time.monotonic()
+    design = Task(kind="design", payload={}, resources=ResourceRequest(1))
+    ex.submit(design)
+    done = {t.uid: t for t in (ex.drain(timeout=10), ex.drain(timeout=10))}
+    design_latency = time.monotonic() - t0
+    ex.shutdown()
+    assert done[design.uid].state == TaskState.DONE
+    assert done[ft.uid].state == TaskState.DONE
+    assert done[ft.uid].result["preempted"] is True
+    assert design_latency < 2.0               # yielded within a step or two
+    assert ex.stats()["n_preempted"] >= 1
+
+
+def test_submit_preempts_even_with_all_workers_busy():
+    """The submit-time signal: with a single worker stuck inside the
+    trainer fn, no idle worker exists to notice the queued design task —
+    submit() itself must set preempt_requested."""
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    started = threading.Event()
+
+    def trainer_fn(sm, p):
+        t = p["_task"]
+        started.set()
+        for step in range(400):
+            if t.preempt_requested:
+                return {"preempted": True, "steps_done": step}
+            time.sleep(0.01)
+        return {"preempted": False, "steps_done": 400}
+
+    ex.register("ft", trainer_fn)
+    ex.register("design", lambda sm, p: "designed")
+    ft = Task(kind="ft", payload={}, priority=100, preemptible=True,
+              resources=ResourceRequest(1))
+    ex.submit(ft)
+    assert started.wait(timeout=5)
+    t0 = time.monotonic()
+    design = Task(kind="design", payload={}, resources=ResourceRequest(1))
+    ex.submit(design)
+    done = {t.uid: t for t in (ex.drain(timeout=10), ex.drain(timeout=10))}
+    latency = time.monotonic() - t0
+    ex.shutdown()
+    assert done[design.uid].state == TaskState.DONE
+    assert done[ft.uid].result["preempted"] is True
+    assert latency < 2.0
+
+
+# ---------------------------------------------------------------------------
+# finetune payload: data-parallel train step + preempt/resume + hot swap
+# ---------------------------------------------------------------------------
+
+
+def _finetune_batch(payload, n=4, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    P = payload.gen_cfg.frontend_seq
+    return {"backbones": rng.normal(size=(n, P, 16)).astype(np.float32),
+            "sequences": rng.integers(1, 20, size=(n, L)).astype(np.int32),
+            "weights": np.linspace(1.0, 0.2, n).astype(np.float32)}
+
+
+def test_finetune_publishes_new_version_and_swaps_generator():
+    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=12)
+    tuner = FinetunePayload(payload, lr=1e-3, steps=6)
+    alloc = DeviceAllocator(jax.devices())
+    sub = alloc.request(1)
+    bb = np.random.default_rng(3).normal(size=(20, 16)).astype(np.float32)
+    gen_payload = {"backbone": bb, "n": 2, "length": 12, "seed": 5}
+    before = payload.generate(sub, gen_payload)
+    assert before["gen_version"] == 0
+    res = tuner.finetune(sub, _finetune_batch(payload))
+    assert res["preempted"] is False
+    assert res["new_version"] == 1 and res["base_version"] == 0
+    assert res["loss_last"] < res["loss_first"]
+    assert res["mean_ll_last"] > res["mean_ll_first"]
+    after = payload.generate(sub, gen_payload)
+    assert after["gen_version"] == 1          # hot-swapped on next dispatch
+    # second publish retires version 0 (keep=2) -> its cached device
+    # copies are evicted by version
+    tuner.finetune(sub, _finetune_batch(payload, seed=1))
+    assert payload.param_store.versions() == [1, 2]
+    with payload._cache_lock:
+        gen_vers = {k[0][1] for k in payload._cache
+                    if isinstance(k[0], tuple) and k[0][0] == "gen"}
+    assert 0 not in gen_vers
+    # a dispatch holding a version retired mid-flight must not re-insert
+    # its param copy into the cache (the retire hook already ran)
+    ver0_params = payload.param_store.get(1)
+    payload._drop_gen_versions([1])
+    payload._params_on(("gen", 1), ver0_params, sub.devices.flat[0])
+    with payload._cache_lock:
+        assert not any(isinstance(k[0], tuple) and k[0] == ("gen", 1)
+                       for k in payload._cache)
+    alloc.release(sub)
+
+
+def test_finetune_preempt_resume_reaches_full_step_count():
+    payload = ProteinPayload(jax.random.PRNGKey(1), reduced=True, length=12)
+    tuner = FinetunePayload(payload, lr=1e-3, steps=8)
+    alloc = DeviceAllocator(jax.devices())
+    sub = alloc.request(1)
+    batch = _finetune_batch(payload)
+    task = Task(kind="finetune", payload={}, preemptible=True)
+    task.preempt_requested = True             # yield after the first step
+    r1 = tuner.finetune(sub, dict(batch, _task=task))
+    assert r1["preempted"] is True and r1["steps_done"] == 1
+    assert payload.param_store.version == 0   # nothing published yet
+    r2 = tuner.finetune(sub, dict(batch, resume=r1["resume"]))
+    assert r2["preempted"] is False
+    assert r2["steps_done"] == 8 and r2["steps_run"] == 7
+    assert r2["new_version"] == 1
+    assert r2["loss_last"] < r2["loss_first"]  # progress was never lost
+    alloc.release(sub)
+
+
+def test_fold_in_keys_bit_identical_to_eager_loop():
+    """Satellite: the vectorized per-device key packing must reproduce the
+    eager fold_in loop exactly, or seeded runs would change."""
+    eager = np.stack([
+        np.asarray(jax.random.fold_in(jax.random.PRNGKey(7), i))
+        for i in range(5)])
+    np.testing.assert_array_equal(_fold_in_keys(7, 5), eager)
+
+
+# ---------------------------------------------------------------------------
+# trainer service
+# ---------------------------------------------------------------------------
+
+
+def _service(ex, finetune_every=1, min_designs=1, steps=3, **kw):
+    payload_store = ParamStore({"w": np.zeros(2, np.float32)})
+    buf = ReplayBuffer(capacity=16)
+    cfg = EvolutionConfig(finetune_every=finetune_every,
+                          min_designs=min_designs, batch_size=4,
+                          steps=steps, **kw)
+    return TrainerService(ex, buf, payload_store, cfg), buf
+
+
+def test_trainer_service_gates_on_idle_and_threshold():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    gate = threading.Event()
+    ex.register("blocker", lambda sm, p: gate.wait(timeout=10))
+    svc, buf = _service(ex, finetune_every=2)
+    assert svc.tick() is None                 # nothing accepted yet
+    svc.add_design(_design(1.0, seed=0))
+    assert svc.tick() is None                 # below finetune_every
+    svc.add_design(_design(0.5, seed=1))
+    ex.submit(Task(kind="blocker", payload={}))
+    time.sleep(0.1)
+    ex.submit(Task(kind="blocker", payload={}))   # queued design work
+    assert svc.tick() is None                 # queue non-empty: stand by
+    gate.set()
+    for _ in range(2):
+        ex.drain(timeout=10)
+    t = svc.tick()                            # idle now: submits
+    assert t is not None and t.preemptible and t.kind == "finetune"
+    assert svc.busy() and svc.tick() is None  # one inflight at a time
+    ex.shutdown()
+
+
+def test_trainer_service_completion_and_preemption_routing():
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+
+    calls = {"n": 0}
+
+    def fake_finetune(sm, p):
+        calls["n"] += 1
+        if "resume" not in p:
+            return {"preempted": True, "steps_done": 1, "steps_run": 1,
+                    "n_designs": 2, "n_devices": 1, "base_version": 0,
+                    "elapsed_s": 0.01,
+                    "resume": {"step": 1, "base_version": 0}}
+        return {"preempted": False, "steps_done": 3, "steps_run": 2,
+                "n_designs": 2, "n_devices": 1, "base_version": 0,
+                "new_version": 1, "elapsed_s": 0.02,
+                "loss_first": 2.0, "loss_last": 1.0,
+                "mean_ll_first": -2.0, "mean_ll_last": -1.0}
+
+    ex.register("finetune", fake_finetune)
+    svc, buf = _service(ex)
+    svc.add_design(_design(1.0, seed=0))
+    svc.add_design(_design(0.7, seed=1))
+    t1 = svc.tick()
+    assert t1 is not None
+    done = ex.drain(timeout=10)
+    assert svc.owns(done.uid)
+    svc.on_complete(done)
+    assert svc.preempted == 1 and svc.busy()  # continuation pending
+    t2 = svc.tick()
+    assert t2 is not None and "resume" in t2.payload
+    done = ex.drain(timeout=10)
+    svc.on_complete(done)
+    ex.shutdown()
+    assert svc.completed == 1 and not svc.busy()
+    assert calls["n"] == 2
+    assert svc.history[-1]["new_version"] == 1
+    rep = svc.report(makespan=1.0, total_devices=1)
+    assert rep["preempted"] == 1 and rep["completed"] == 1
+    assert rep["steps_run"] == 3
+    assert 0 < rep["trainer_utilization"] < 1
+
+
+# ---------------------------------------------------------------------------
+# coordinator: disabled-evolution equivalence + enabled end-to-end
+# ---------------------------------------------------------------------------
+
+
+class _FastPayload:
+    """Instant payload fns whose results depend only on payload *content*
+    (never on global uid-derived seeds or thread timing), so two separate
+    sequential coordinator runs are comparable event-for-event."""
+
+    def generate(self, sm, p):
+        seed = int(np.abs(np.asarray(p["backbone"])).sum() * 1e3) % (2**31)
+        rng = np.random.default_rng(seed + p["length"])
+        n, L = p["n"], p["length"]
+        return {"seqs": rng.integers(1, 21, size=(n, L)).astype(np.int32),
+                "lls": -rng.random(n).astype(np.float32),
+                "gen_version": 0}
+
+    def predict(self, sm, p):
+        rng = np.random.default_rng(int(np.sum(p["sequence"])) % 100000)
+        return {"plddt": 40.0 + 40.0 * rng.random(),
+                "ptm": float(rng.random()), "pae": 5.0 + 20.0 * rng.random()}
+
+
+def _coord_run(trainer):
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    fp = _FastPayload()
+    ex.register("generate", fp.generate)
+    ex.register("predict", fp.predict)
+    if trainer == "attached-disabled":
+        svc = TrainerService(ex, ReplayBuffer(),
+                             ParamStore({"w": np.zeros(2)}),
+                             EvolutionConfig(finetune_every=0))
+    else:
+        svc = None
+    proto = ImpressProtocol(ProtocolConfig(
+        n_candidates=5, n_cycles=3, max_sub_pipelines=2, seed=11,
+        gen_devices=1, predict_devices=1))
+    # sequential (max_inflight=1): completion order is submission order,
+    # so the event sequence is deterministic and run-to-run comparable
+    coord = Coordinator(ex, proto, max_inflight=1, trainer=svc)
+    for i in range(3):
+        coord.add_pipeline(proto.new_pipeline(
+            f"P{i}", np.zeros((20, 16), np.float32), np.zeros(16, np.float32),
+            14, np.arange(1, 5, dtype=np.int32)))
+    rep = coord.run(timeout=60)
+    ex.shutdown()
+    return rep
+
+
+def test_disabled_evolution_is_event_sequence_identical():
+    """Acceptance: with evolution disabled (finetune_every=0), a fixed-seed
+    run's decision-event sequence is identical to a run with no evolution
+    machinery attached at all."""
+    rep_off = _coord_run(trainer=None)
+    rep_dis = _coord_run(trainer="attached-disabled")
+    strip = lambda evs: [(e["event"], e.get("pipeline"), e.get("cycle"),
+                          e.get("gen_version")) for e in evs]
+    assert strip(rep_off["events"]) == strip(rep_dis["events"])
+    assert rep_dis["evolution"]["submitted"] == 0
+    assert rep_off["evolution"] is None
+    assert list(rep_off["quality_by_version"]) == [0]
+
+
+def test_evolution_end_to_end_with_real_models():
+    """Full loop: accepted designs feed the buffer, the trainer finetunes on
+    idle devices, evolved params hot-swap, and the report shows versioned
+    provenance + trainer stats."""
+    task = {"backbone": np.random.default_rng(0).normal(
+                size=(18, 16)).astype(np.float32),
+            "target": np.zeros(16, np.float32)}
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=12)
+    payload.register_all(ex)
+    tuner = FinetunePayload(payload, lr=1e-3, steps=5)
+    tuner.register(ex)
+    buf = ReplayBuffer(capacity=32)
+    svc = TrainerService(ex, buf, payload.param_store, EvolutionConfig(
+        finetune_every=1, min_designs=1, batch_size=4, steps=5))
+    proto = ImpressProtocol(ProtocolConfig(
+        n_candidates=3, n_cycles=2, adaptive=True, gen_devices=1,
+        predict_devices=1, max_sub_pipelines=0, seed=0))
+    coord = Coordinator(ex, proto, trainer=svc)
+    coord.add_pipeline(proto.new_pipeline(
+        "evo", task["backbone"], task["target"], 12,
+        np.arange(1, 5, dtype=np.int32)))
+    rep = coord.run(timeout=240)
+    ex.shutdown()
+    assert rep["executor"]["n_failed"] == 0
+    evo = rep["evolution"]
+    assert evo is not None and evo["enabled"]
+    assert len(buf) >= 1 and evo["buffer"]["size"] == len(buf)
+    assert evo["completed"] >= 1              # at least one finetune ran
+    assert evo["param_version"] >= 1          # evolved params published
+    ft = evo["finetunes"][-1]
+    assert ft["loss_last"] < ft["loss_first"]
+    assert rep["quality_by_version"]          # provenance surfaced
+    assert evo["trainer_utilization"] >= 0.0

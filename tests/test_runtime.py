@@ -97,6 +97,48 @@ def test_utilization_accounting():
     assert 0.0 < u <= 1.0
 
 
+def test_request_for_rows_halving_under_contention():
+    """Row-proportional grants shrink by halving when the pool is under
+    pressure, never below the request's floor."""
+    alloc = DeviceAllocator(fake_grid(8,))
+    hog = alloc.request(5)                    # 3 devices left
+    sub = alloc.request_for_rows(32)          # wants 8 -> halves 4 -> 2
+    assert sub is not None and sub.n_devices == 2
+    small = alloc.request_for_rows(8)         # 1 free: floor grant
+    assert small is not None and small.n_devices == 1
+    assert alloc.n_free == 0
+    assert alloc.request_for_rows(4) is None  # nothing left at all
+    alloc.release(small)
+    # the floor is respected absolutely: 1 device free, floor 2 -> None
+    assert alloc.request_for_rows(64, floor=2) is None
+    alloc.release(hog)
+    alloc.release(sub)
+    # floor also raises tiny-row grants up to the fixed device count
+    floored = alloc.request_for_rows(1, floor=4)
+    assert floored.n_devices == 4
+    alloc.release(floored)
+
+
+def test_shape_stats_across_mixed_grant_shapes():
+    alloc = DeviceAllocator(fake_grid(8,))
+    subs = [alloc.request_for_rows(r) for r in (1, 3, 16)]
+    # buckets 1, 4, 16 -> grants 1, 4, (halved to fit 3 free) 2
+    assert [s.n_devices for s in subs] == [1, 4, 2]
+    st = alloc.shape_stats()
+    assert st["grants"] == 3
+    assert st["downsized"] == 1               # only the 16-row grant shrank
+    assert st["mean_granted"] == (1 + 4 + 2) / 3
+    expect_rpd = (1 / 1 + 3 / 4 + 16 / 2) / 3
+    assert abs(st["mean_rows_per_device"] - expect_rpd) < 1e-9
+    for s in subs:
+        alloc.release(s)
+    # stats accumulate across releases
+    again = alloc.request_for_rows(8)
+    assert again.n_devices == 8
+    assert alloc.shape_stats()["grants"] == 4
+    alloc.release(again)
+
+
 # ---------------------------------------------------------------------------
 # scheduler
 # ---------------------------------------------------------------------------

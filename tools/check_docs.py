@@ -2,9 +2,14 @@
 """Docs consistency checks (CI `docs` job, also runnable locally):
 
   1. every internal markdown link in README.md / docs/ARCHITECTURE.md
-     resolves to an existing file or directory, and
+     resolves to an existing file or directory,
   2. the tier-1 verify command shown in README.md is exactly the one
-     ROADMAP.md declares.
+     ROADMAP.md declares,
+  3. every package under src/repro/ appears in README's source map (a new
+     package must be documented), and
+  4. docs/ARCHITECTURE.md keeps its required walkthrough sections
+     (pipeline lifecycle, task flow, batching, model evolution, adding a
+     task kind).
 
   python tools/check_docs.py
 """
@@ -20,6 +25,22 @@ DOCS = ["README.md", "docs/ARCHITECTURE.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 VERIFY_RE = re.compile(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`")
+
+# section headings docs/ARCHITECTURE.md must keep (## level, any numbering)
+ARCH_SECTIONS = [
+    "Pipeline lifecycle",
+    "Task flow",
+    "Batching and coalescing",
+    "Model evolution",
+    "Adding a new task kind",
+]
+
+
+def repro_packages():
+    """Top-level packages under src/repro/ (dirs holding any .py file)."""
+    pkg_root = ROOT / "src" / "repro"
+    return sorted(p.name for p in pkg_root.iterdir()
+                  if p.is_dir() and any(p.glob("*.py")))
 
 
 def internal_links(md_path: Path):
@@ -50,11 +71,28 @@ def main() -> int:
                 f"README.md: tier-1 verify command does not match "
                 f"ROADMAP.md ({cmd!r})")
 
+    readme = (ROOT / "README.md").read_text()
+    for pkg in repro_packages():
+        if f"`{pkg}/`" not in readme:
+            errors.append(
+                f"README.md: package src/repro/{pkg}/ missing from the "
+                f"source map (document new packages)")
+
+    arch = (ROOT / "docs" / "ARCHITECTURE.md").read_text() \
+        if (ROOT / "docs" / "ARCHITECTURE.md").exists() else ""
+    for section in ARCH_SECTIONS:
+        if not re.search(rf"^##.*{re.escape(section)}", arch, re.M):
+            errors.append(
+                f"docs/ARCHITECTURE.md: required section heading "
+                f"missing -> {section!r}")
+
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         n = sum(len(list(internal_links(ROOT / d))) for d in DOCS)
-        print(f"check_docs: OK ({n} internal links, verify command in sync)")
+        print(f"check_docs: OK ({n} internal links, verify command in "
+              f"sync, {len(repro_packages())} packages mapped, "
+              f"{len(ARCH_SECTIONS)} architecture sections present)")
     return 1 if errors else 0
 
 
