@@ -1,57 +1,44 @@
 """Shared IMPRESS experiment runner for the paper-table benchmarks.
 
 Runs the adaptive (IM-RP) and control (CONT-V) protocols with real (reduced)
-ProGen/FoldScore payloads on the available devices, mirroring the paper's
-experimental setup (§III): same starting structures, same cycle budget; the
-control picks candidates at random, never compares, never prunes, executes
-strictly sequentially.
+ProGen/FoldScore payloads on the available devices through the session
+facade, mirroring the paper's experimental setup (§III): same starting
+structures, same cycle budget; the control picks candidates at random,
+never compares, never prunes, executes strictly sequentially (the "cont-v"
+protocol kind carries ``max_inflight=1``).
 """
 
 from __future__ import annotations
 
-import time
 from functools import lru_cache
 
 import jax
-import numpy as np
 
-from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
-                        ProteinPayload)
-from repro.core.payload import compile_log, clear_compile_log
-from repro.data import protein_design_tasks
-from repro.runtime import AsyncExecutor, DeviceAllocator
+from repro.core.payload import clear_compile_log, compile_log
+from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
 
 
 def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,
                 n_candidates=6, receptor_len=24, seed=0,
                 max_sub_pipelines=8, reduced=True, timeout=900.0,
                 score_batch=0, generate_batch_size=0):
-    tasks = protein_design_tasks(n_structures, receptor_len=receptor_len,
-                                 peptide_len=6, seed=seed)
-    alloc = DeviceAllocator(jax.devices())
-    ex = AsyncExecutor(alloc, max_workers=4)
-    t_boot0 = time.monotonic()
-    payload = ProteinPayload(jax.random.PRNGKey(seed), reduced=reduced,
-                             length=receptor_len)
-    payload.register_all(ex, generate_batch_rows=generate_batch_size)
-    bootstrap_s = time.monotonic() - t_boot0
+    spec = CampaignSpec(
+        structures=n_structures, receptor_len=receptor_len, peptide_len=6,
+        protocols=(ProtocolSpec(
+            "im-rp" if adaptive else "cont-v",
+            n_candidates=n_candidates, n_cycles=n_cycles,
+            max_sub_pipelines=max_sub_pipelines,
+            score_batch=score_batch,
+            generate_batch_size=generate_batch_size,
+            gen_devices=min(2, len(jax.devices())), predict_devices=1),),
+        seed=seed, reduced=reduced, max_workers=4, timeout=timeout)
+    sess = ImpressSession(spec)
     clear_compile_log()
-    pc = ProtocolConfig(
-        n_candidates=n_candidates, n_cycles=n_cycles, adaptive=adaptive,
-        gen_devices=min(2, len(jax.devices())), predict_devices=1,
-        max_sub_pipelines=max_sub_pipelines if adaptive else 0, seed=seed,
-        score_batch=score_batch, generate_batch_size=generate_batch_size)
-    proto = ImpressProtocol(pc)
-    coord = Coordinator(ex, proto, max_inflight=None if adaptive else 1)
-    for t in tasks:
-        coord.add_pipeline(proto.new_pipeline(
-            t["name"], t["backbone"], t["target"], t["receptor_len"],
-            t["peptide_tokens"]))
-    report = coord.run(timeout=timeout)
-    report["bootstrap_s"] = bootstrap_s
+    report = sess.run().to_dict()
+    report["bootstrap_s"] = sess.bootstrap_s
     report["exec_setup_s"] = sum(sum(v) for v in compile_log.values())
-    report["timeline"] = alloc.busy_timeline()
-    ex.shutdown()
+    report["timeline"] = sess.allocator.busy_timeline()
+    sess.shutdown()
     return report
 
 

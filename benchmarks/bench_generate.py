@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import ProteinPayload, ResourceRequest, Task
 from repro.core.payload import gen_batch_log, generate_batch_coalesce_rule
-from repro.runtime import AsyncExecutor, DeviceAllocator
+from repro.session import CampaignSpec, ImpressSession
 
 MODES = ("per-pipeline", "batched", "continuous")
 
@@ -50,11 +50,17 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length):
     """Sample n_pipelines × n_cand sequences through the executor; returns
     (seconds, coalesce stats). The backlog modes hold the device with a
     blocker while tasks queue; the continuous mode submits with no backlog
-    at all and relies on rolling admission to fuse the stream."""
-    alloc = DeviceAllocator(jax.devices())
-    ex = AsyncExecutor(alloc, max_workers=4)
-    ex.register("generate", payload.generate)
-    ex.register("generate_batch", payload.generate_batch)
+    at all and relies on rolling admission to fuse the stream.
+
+    The session facade does the wiring (allocator/executor/payload
+    registry — the shared ``payload`` keeps one compile cache across
+    modes); each mode then registers its own coalesce rule and submits
+    raw tasks directly, bypassing any protocol."""
+    sess = ImpressSession(
+        CampaignSpec(protocols=(), receptor_len=length, max_workers=4,
+                     coalesce=False),
+        payload=payload)
+    ex = sess.executor
     if mode == "batched":
         ex.register_coalescable("generate_batch",
                                 generate_batch_coalesce_rule(
@@ -93,7 +99,7 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length):
     dt = time.perf_counter() - t0
     stats = ex.coalesce_stats()
     stats["occupancy"] = [b["occupancy"] for b in gen_batch_log[log_start:]]
-    ex.shutdown()
+    sess.shutdown()
     return dt, stats
 
 

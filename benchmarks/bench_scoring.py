@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import ProteinPayload, Task
 from repro.core.payload import batch_log, predict_batch_coalesce_rule
-from repro.runtime import AsyncExecutor, DeviceAllocator
+from repro.session import CampaignSpec, ImpressSession
 
 MODES = ("per-candidate", "batched", "coalesced")
 
@@ -33,11 +33,17 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length, split):
     """Score n_pipelines × n_cand candidates through the executor; returns
     (seconds, coalesce stats). A blocker task holds the device while the
     scoring tasks queue up, so the coalesced mode has a backlog to fuse —
-    the steady-state shape of many concurrent pipelines."""
-    alloc = DeviceAllocator(jax.devices())
-    ex = AsyncExecutor(alloc, max_workers=4)
-    ex.register("predict", payload.predict)
-    ex.register("predict_batch", payload.predict_batch)
+    the steady-state shape of many concurrent pipelines.
+
+    The session facade does the wiring (allocator/executor/payload
+    registry — the shared ``payload`` keeps one compile cache across
+    modes); raw tasks are then submitted directly, bypassing any protocol.
+    """
+    sess = ImpressSession(
+        CampaignSpec(protocols=(), receptor_len=length, max_workers=4,
+                     coalesce=False),
+        payload=payload)
+    ex = sess.executor
     if mode == "coalesced":
         ex.register_coalescable("predict_batch",
                                 predict_batch_coalesce_rule())
@@ -67,7 +73,7 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length, split):
             raise RuntimeError(f"bench mode {mode}: executor stalled")
     dt = time.perf_counter() - t0
     stats = ex.coalesce_stats()
-    ex.shutdown()
+    sess.shutdown()
     return dt, stats
 
 

@@ -1,7 +1,8 @@
 """The paper's core experiment as a runnable demo: IM-RP (adaptive,
-asynchronous, dynamically allocated) vs CONT-V (sequential control) on a
-simulated 8-device pilot, with optional fault injection and straggler
-mitigation.
+asynchronous, dynamically allocated) and CONT-V (sequential control) as
+**one multi-protocol campaign** — both protocols run concurrently on one
+executor/allocator via the session facade, so the paper's comparison is a
+single run. Optional fault injection and straggler mitigation.
 
   PYTHONPATH=src python examples/adaptive_design.py [--fault] [--stragglers]
 
@@ -19,79 +20,63 @@ import argparse    # noqa: E402
 import threading   # noqa: E402
 import time        # noqa: E402
 
-import jax         # noqa: E402
-
-from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,  # noqa: E402
-                        ProteinPayload)
-from repro.data import protein_design_tasks  # noqa: E402
-from repro.runtime import AsyncExecutor, DeviceAllocator  # noqa: E402
-
-
-def run(adaptive, *, fault=False, stragglers=False, n_structures=4,
-        n_cycles=3):
-    tasks = protein_design_tasks(n_structures, receptor_len=24, peptide_len=6)
-    alloc = DeviceAllocator(jax.devices())
-    ex = AsyncExecutor(alloc, max_workers=8, max_retries=2,
-                       straggler_factor=4.0 if stragglers else None)
-    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=24)
-    payload.register_all(ex)
-    pc = ProtocolConfig(n_candidates=6, n_cycles=n_cycles, adaptive=adaptive,
-                        gen_devices=2, predict_devices=1,
-                        max_sub_pipelines=6 if adaptive else 0)
-    proto = ImpressProtocol(pc)
-    coord = Coordinator(ex, proto, max_inflight=None if adaptive else 1)
-    for t in tasks:
-        coord.add_pipeline(proto.new_pipeline(
-            t["name"], t["backbone"], t["target"], t["receptor_len"],
-            t["peptide_tokens"]))
-
-    if fault:
-        def kill_one():
-            time.sleep(2.0)
-            victim = jax.devices()[-1]
-            requeued = ex.inject_device_failure(victim)
-            print(f"  !! injected failure of {victim} — pool shrinks to "
-                  f"{alloc.healthy_devices}, {len(requeued)} task(s) requeued")
-        threading.Thread(target=kill_one, daemon=True).start()
-
-    rep = coord.run(timeout=600)
-    ex.shutdown()
-    return rep
+from repro.session import (CampaignSpec, ImpressSession,  # noqa: E402
+                           ProtocolSpec)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fault", action="store_true",
-                    help="inject a device failure mid-run (IM-RP)")
+                    help="inject a device failure mid-run")
     ap.add_argument("--stragglers", action="store_true",
                     help="enable speculative straggler duplicates")
     args = ap.parse_args()
 
-    print(f"pilot: {len(jax.devices())} devices")
-    results = {}
-    for adaptive, name in ((False, "CONT-V"), (True, "IM-RP")):
-        rep = run(adaptive, fault=args.fault and adaptive,
-                  stragglers=args.stragglers)
-        results[name] = rep
-        print(f"\n=== {name} ===")
-        print(f"  pipelines={rep['n_pipelines']} "
-              f"sub-pipelines={rep['n_sub_pipelines']} "
-              f"trajectories={rep['trajectories']}")
-        print(f"  device utilization {100 * rep['utilization']:.0f}%  "
-              f"makespan {rep['makespan_s']:.1f}s  "
-              f"failed={rep['executor']['n_failed']} "
-              f"retried={rep['executor']['n_retried']}")
-        for c, m in sorted(rep["cycles"].items()):
+    spec = CampaignSpec(
+        structures=4, receptor_len=24, peptide_len=6,
+        protocols=(
+            ProtocolSpec("im-rp", n_candidates=6, n_cycles=3,
+                         max_sub_pipelines=6, gen_devices=2),
+            ProtocolSpec("cont-v", n_candidates=6, n_cycles=3,
+                         gen_devices=2),
+        ),
+        max_workers=8, max_retries=2,
+        straggler_factor=4.0 if args.stragglers else None)
+
+    with ImpressSession(spec) as session:
+        print(f"pilot: {session.allocator.total_devices} devices, "
+              f"protocols: {list(session.protocols)}")
+        if args.fault:
+            def kill_one():
+                time.sleep(2.0)
+                victim = session.allocator.grid.flat[-1]
+                requeued = session.executor.inject_device_failure(victim)
+                print(f"  !! injected failure of {victim} — pool shrinks to "
+                      f"{session.allocator.healthy_devices}, "
+                      f"{len(requeued)} task(s) requeued")
+            threading.Thread(target=kill_one, daemon=True).start()
+        report = session.run(timeout=600)
+
+    for name in ("cont-v", "im-rp"):
+        p = report.protocols[name]
+        print(f"\n=== {name.upper()} ===")
+        print(f"  pipelines={p['n_pipelines']} "
+              f"sub-pipelines={p['n_sub_pipelines']} "
+              f"trajectories={p['trajectories']}")
+        for c, m in sorted(p["cycles"].items()):
             print(f"  cycle {c}: pLDDT={m['plddt_median']:.2f} "
                   f"pTM={m['ptm_median']:.3f} pAE={m['pae_median']:.2f} "
                   f"(n={m['n']})")
 
-    a, c = results["IM-RP"], results["CONT-V"]
-    print("\n=== paper-style summary (cf. Table I) ===")
+    a = report.protocols["im-rp"]
+    c = report.protocols["cont-v"]
+    print("\n=== paper-style summary (cf. Table I), one concurrent run ===")
     print(f"  trajectories: {c['trajectories']} -> {a['trajectories']} "
           f"({a['trajectories'] / max(c['trajectories'], 1):.1f}x)")
-    print(f"  utilization:  {100 * c['utilization']:.0f}% -> "
-          f"{100 * a['utilization']:.0f}%")
+    print(f"  shared-pilot utilization {100 * report.utilization:.0f}%, "
+          f"makespan {report.makespan_s:.1f}s, "
+          f"failed={report.executor['n_failed']} "
+          f"retried={report.executor['n_retried']}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@ AI<->HPC coupling — accepted designs from the IMPRESS loop feed a replay
 buffer, a trainer service finetunes the generator on idle devices *through
 the same middleware* (preemptible ``finetune`` tasks scheduled on the pilot
 alongside generate/predict tasks), and evolved params hot-swap into the
-generators mid-run via the versioned ParamStore.
+generators mid-run via the versioned ParamStore. The whole wiring is one
+``CampaignSpec`` with ``evolution=True``.
 
   PYTHONPATH=src python examples/online_finetune.py
 """
@@ -12,42 +13,25 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import jax          # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,  # noqa: E402
-                        ProteinPayload)
-from repro.core.payload import FinetunePayload  # noqa: E402
-from repro.data import protein_design_tasks  # noqa: E402
-from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService  # noqa: E402
-from repro.runtime import AsyncExecutor, DeviceAllocator  # noqa: E402
+from repro.session import (CampaignSpec, ImpressSession,  # noqa: E402
+                           ProtocolSpec)
 
 
 def main():
-    tasks = protein_design_tasks(2, receptor_len=20, peptide_len=5)
-    alloc = DeviceAllocator(jax.devices())
-    ex = AsyncExecutor(alloc, max_workers=4)
-    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=20)
-    payload.register_all(ex)
-    FinetunePayload(payload, lr=3e-4, steps=15).register(ex)
-
-    buffer = ReplayBuffer(capacity=64)
-    trainer = TrainerService(ex, buffer, payload.param_store,
-                             EvolutionConfig(finetune_every=2, min_designs=2,
-                                             batch_size=8, steps=15))
+    spec = CampaignSpec(
+        structures=2, receptor_len=20, peptide_len=5,
+        protocols=(ProtocolSpec("im-rp", n_candidates=5, n_cycles=3,
+                                max_sub_pipelines=2, gen_devices=2),),
+        evolution=True, finetune_every=2, min_designs=2,
+        finetune_batch=8, finetune_steps=15, finetune_lr=3e-4,
+        replay_capacity=64, max_workers=4)
 
     print("== design with online model evolution ==")
-    proto = ImpressProtocol(ProtocolConfig(
-        n_candidates=5, n_cycles=3, adaptive=True, gen_devices=2,
-        predict_devices=1, max_sub_pipelines=2, seed=0))
-    coord = Coordinator(ex, proto, trainer=trainer)
-    for t in tasks:
-        coord.add_pipeline(proto.new_pipeline(
-            t["name"], t["backbone"], t["target"], t["receptor_len"],
-            t["peptide_tokens"]))
-    rep = coord.run(timeout=300)
+    with ImpressSession(spec) as session:
+        rep = session.run(timeout=300)
+        utilization = session.allocator.utilization()
 
-    evo = rep["evolution"]
+    evo = rep.evolution
     print(f"  accepted designs buffered: {evo['buffer']['size']} "
           f"(mean fitness {evo['buffer']['mean_fitness']:.3f})")
     print(f"  finetunes: {evo['completed']} completed, "
@@ -58,14 +42,13 @@ def main():
               f"weighted NLL {ft['loss_first']:.3f} -> {ft['loss_last']:.3f} "
               f"on {ft['n_designs']} designs")
     print("  design quality by generator version:")
-    for v, q in rep["quality_by_version"].items():
+    for v, q in rep.quality_by_version.items():
         print(f"    v{v}: {q['n']} accepted, "
               f"fitness median {q['fitness_median']:.3f}")
     print(f"\ntrainer utilization {100 * evo['trainer_utilization']:.0f}% of "
           f"pilot device-seconds, pilot utilization "
-          f"{100 * alloc.utilization():.0f}% — generate/predict/finetune "
+          f"{100 * utilization:.0f}% — generate/predict/finetune "
           f"tasks share one pilot (the paper's concurrent AI+HPC coupling)")
-    ex.shutdown()
 
 
 if __name__ == "__main__":

@@ -2,48 +2,35 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Builds the generator (ProteinMPNN analogue) and scorer (AlphaFold analogue),
-then drives a single PDZ design trajectory through the IMPRESS protocol:
-generate 6 candidates -> rank by log-likelihood -> predict -> adaptive
-accept/re-select/prune, for 3 cycles, printing every decision.
+One declarative ``CampaignSpec`` is the whole setup: the session facade
+builds the generator (ProteinMPNN analogue) and scorer (AlphaFold
+analogue), wires the middleware, and drives a single PDZ design trajectory
+through the IMPRESS protocol — generate 6 candidates -> rank by
+log-likelihood -> predict -> adaptive accept/re-select/prune, for 3
+cycles, printing every decision.
 """
 
-import jax
-
-from repro.core import (Coordinator, ImpressProtocol, ProtocolConfig,
-                        ProteinPayload)
-from repro.data import protein_design_tasks
-from repro.runtime import AsyncExecutor, DeviceAllocator
+from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
 
 
 def main():
-    task = protein_design_tasks(1, receptor_len=24, peptide_len=6)[0]
-    alloc = DeviceAllocator(jax.devices())
-    executor = AsyncExecutor(alloc, max_workers=2)
-    payload = ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=24)
-    payload.register_all(executor)
+    spec = CampaignSpec(structures=1, receptor_len=24, peptide_len=6,
+                        protocols=(ProtocolSpec("im-rp", n_candidates=6,
+                                                n_cycles=3),),
+                        max_workers=2)
+    with ImpressSession(spec) as session:
+        report = session.run(timeout=300)
 
-    protocol = ImpressProtocol(ProtocolConfig(
-        n_candidates=6, n_cycles=3, adaptive=True,
-        gen_devices=1, predict_devices=1))
-    coordinator = Coordinator(executor, protocol)
-    coordinator.add_pipeline(protocol.new_pipeline(
-        task["name"], task["backbone"], task["target"],
-        task["receptor_len"], task["peptide_tokens"]))
-
-    report = coordinator.run(timeout=300)
-    executor.shutdown()
-
-    print(f"\n=== {task['name']} design trajectory ===")
-    for e in report["events"]:
+    print("\n=== design trajectory ===")
+    for e in report.events:
         print(f"  {e['event']:10s} {e.get('pipeline', '')} "
               f"cycle={e.get('cycle', '')}")
-    for c, m in sorted(report["cycles"].items()):
+    for c, m in sorted(report.cycles.items()):
         print(f"  cycle {c}: pLDDT={m['plddt_median']:.2f} "
               f"pTM={m['ptm_median']:.3f} pAE={m['pae_median']:.2f}")
-    print(f"trajectories evaluated: {report['trajectories']}, "
-          f"makespan {report['makespan_s']:.1f}s, "
-          f"device utilization {100 * report['utilization']:.0f}%")
+    print(f"trajectories evaluated: {report.trajectories}, "
+          f"makespan {report.makespan_s:.1f}s, "
+          f"device utilization {100 * report.utilization:.0f}%")
 
 
 if __name__ == "__main__":

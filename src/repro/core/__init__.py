@@ -1,12 +1,20 @@
-# The paper's primary contribution: the IMPRESS adaptive protein-design
-# protocol (protocol.py), the pipelines coordinator (coordinator.py), the
-# RP-style task/pipeline model (pipeline.py) and the device payload
-# functions (payload.py). The execution runtime lives in repro.runtime.
+# The paper's primary contribution: the campaign API (api.py — the
+# DesignProtocol interface + typed Decision routing), the IMPRESS adaptive
+# protocol (protocol.py), the Pareto multi-objective demo protocol
+# (multi_objective.py), the multi-protocol pipelines coordinator
+# (coordinator.py), the RP-style task/pipeline model (pipeline.py) and the
+# device payload functions (payload.py). The execution runtime lives in
+# repro.runtime; the declarative session facade in repro.session.
+from repro.core.api import Decision, DesignProtocol
 from repro.core.coordinator import Coordinator
+from repro.core.multi_objective import (MultiObjectiveConfig,
+                                        MultiObjectiveProtocol)
 from repro.core.payload import ProteinPayload
 from repro.core.pipeline import Pipeline, ResourceRequest, Task, TaskState
 from repro.core.protocol import ImpressProtocol, ProtocolConfig, fitness
 
-__all__ = ["Coordinator", "ProteinPayload", "Pipeline", "ResourceRequest",
+__all__ = ["Decision", "DesignProtocol", "Coordinator",
+           "MultiObjectiveConfig", "MultiObjectiveProtocol",
+           "ProteinPayload", "Pipeline", "ResourceRequest",
            "Task", "TaskState", "ImpressProtocol", "ProtocolConfig",
            "fitness"]

@@ -1,115 +1,192 @@
 """The IMPRESS pipelines coordinator (paper Fig. 1, boxes 1/3/6/7).
 
 Maintains the global perspective over every pipeline's results, drains the
-completion channel, applies the protocol's adaptive decisions, and submits
-new tasks / sub-pipelines through the submission channel — concurrently for
-IM-RP, strictly sequentially for the CONT-V control (``max_inflight=1``).
+completion channel, applies each protocol's adaptive decisions, and submits
+new tasks / sub-pipelines through the submission channel.
 
-Sub-pipelines proposed by the protocol are submitted only when idle
-resources exist ("offloading the newly created pipelines ... to the idle
-resources when possible"), otherwise they are parked and retried on the next
-completion.
+Multi-protocol campaigns: the coordinator is protocol-agnostic. Protocols
+register through ``add_protocol`` (each with its own inflight cap —
+``None`` = unbounded for IM-RP, ``1`` = strictly sequential for the CONT-V
+control), pipelines carry a protocol binding, and completions are routed
+through the owning protocol's **typed handler registry**
+(``DesignProtocol.handlers[kind] -> Decision``) — there is no task-kind
+dispatch in this file, so IM-RP, CONT-V, and any third protocol run
+concurrently on one executor/allocator and new protocols plug in without
+editing the coordinator. The legacy single-protocol constructor
+``Coordinator(executor, protocol, max_inflight=...)`` is kept as a shim.
+
+Sub-pipelines proposed by a protocol (``Decision.spawn``) are materialized
+by that protocol (``spawn_pipeline``) only when idle resources exist
+("offloading the newly created pipelines ... to the idle resources when
+possible"), otherwise they are parked and retried on the next completion.
 
 Batched completions: ``predict_batch`` and ``generate_batch`` tasks complete
 with their pipeline's row slice of a (possibly cross-pipeline fused) device
-batch; the coordinator routes them to the protocol's ``on_*_batch_done``
-handlers and tracks bucket occupancy per dispatch leader, reported alongside
-the allocator's row-proportional shape stats.
+batch; bucket occupancy is tracked per dispatch leader and reported
+alongside the allocator's row-proportional shape stats.
 
 Model evolution (paper §V): with a ``TrainerService`` attached, every
-accepted design is fed to the replay buffer, the trainer is ticked each
-loop iteration (it submits preemptible ``finetune`` tasks only when the
-middleware is idle), and trainer-task completions are routed back to the
-service — they never touch pipeline/inflight accounting, so a disabled or
-absent trainer leaves the design run byte-identical. ``report`` surfaces
-design quality grouped by generator version plus trainer utilization.
+design a protocol declares accepted (``Decision.accepted_design``) is fed
+to the replay buffer, the trainer is ticked each loop iteration (it submits
+preemptible ``finetune`` tasks only when the middleware is idle), and
+trainer-task completions are routed back to the service — they never touch
+pipeline/inflight accounting, so a disabled or absent trainer leaves the
+design run byte-identical. ``report`` surfaces design quality grouped by
+generator version plus trainer utilization.
 
-The coordinator state (trajectory pool, per-pipeline history) is
-JSON-serializable via ``state_dict`` for checkpoint/restart.
+The coordinator state (trajectory pool, per-pipeline history, per-protocol
+state) is JSON-serializable via ``state_dict`` for checkpoint/restart;
+protocols own their pipelines' (de)serialization.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core.api import Decision, DesignProtocol
 from repro.core.pipeline import Pipeline, Task, TaskState
-from repro.core.protocol import ImpressProtocol, ProtocolConfig
 from repro.runtime.executor import AsyncExecutor
 
 
+class _ProtocolBinding:
+    """One registered protocol: its inflight budget, submission buffer, and
+    parked sub-pipeline proposals."""
+
+    def __init__(self, protocol: DesignProtocol, name: str,
+                 max_inflight: Optional[int]):
+        self.protocol = protocol
+        self.name = name
+        self.max_inflight = max_inflight   # None = unbounded (IM-RP)
+        self.inflight = 0
+        self.ready: List[Task] = []        # submission channel buffer
+        self.parked: List[dict] = []       # spawn proposals awaiting devices
+
+
 class Coordinator:
-    def __init__(self, executor: AsyncExecutor, protocol: ImpressProtocol,
+    def __init__(self, executor: AsyncExecutor,
+                 protocol: Optional[DesignProtocol] = None,
                  *, max_inflight: Optional[int] = None, trainer=None):
         self.executor = executor
-        self.protocol = protocol
         self.trainer = trainer               # learn.TrainerService or None
-        self.max_inflight = max_inflight     # None = unbounded (IM-RP)
         self.pipelines: Dict[int, Pipeline] = {}
+        self._bindings: List[_ProtocolBinding] = []
+        self._by_name: Dict[str, _ProtocolBinding] = {}
         self._task_pipeline: Dict[int, int] = {}
-        self._inflight = 0
-        self._ready: List[Task] = []         # submission channel buffer
-        self._parked_spawns: List[dict] = []
+        self._task_binding: Dict[int, _ProtocolBinding] = {}
+        self._pipeline_binding: Dict[int, _ProtocolBinding] = {}
+        self._inflight = 0                   # total across bindings
         self.events: List[dict] = []
         self._done_task_uids: set = set()
         self._occupancy: List[float] = []   # predict_batch bucket occupancy
         self._gen_occupancy: List[float] = []  # generate_batch occupancy
+        if protocol is not None:  # legacy single-protocol shim
+            self.add_protocol(protocol, max_inflight=max_inflight)
+
+    # -- protocol registry -------------------------------------------------
+
+    def add_protocol(self, protocol: DesignProtocol, *,
+                     name: Optional[str] = None,
+                     max_inflight: Optional[int] = None) -> str:
+        """Register a protocol for routing. ``max_inflight`` bounds this
+        protocol's concurrently-submitted tasks (None = unbounded); each
+        protocol gets its own budget, so a sequential control and an
+        asynchronous campaign coexist on one executor."""
+        name = name or f"protocol{len(self._bindings)}"
+        if name in self._by_name:
+            raise ValueError(f"protocol name {name!r} already registered")
+        b = _ProtocolBinding(protocol, name, max_inflight)
+        self._bindings.append(b)
+        self._by_name[name] = b
+        return name
+
+    @property
+    def protocol(self) -> Optional[DesignProtocol]:
+        """The default (first-registered) protocol — legacy accessor."""
+        return self._bindings[0].protocol if self._bindings else None
+
+    @property
+    def max_inflight(self) -> Optional[int]:
+        return self._bindings[0].max_inflight if self._bindings else None
+
+    def _binding_of(self, protocol: Union[None, str, DesignProtocol]
+                    ) -> _ProtocolBinding:
+        if protocol is None:
+            if not self._bindings:
+                raise ValueError("no protocol registered; call add_protocol "
+                                 "or pass one to the constructor")
+            return self._bindings[0]
+        if isinstance(protocol, str):
+            return self._by_name[protocol]
+        for b in self._bindings:
+            if b.protocol is protocol:
+                return b
+        raise ValueError(
+            "protocol object is not registered with this coordinator; "
+            "call add_protocol first (a silent auto-register would bypass "
+            "the registered binding's max_inflight cap)")
+
+    def _event_tag(self, binding: Optional[_ProtocolBinding]) -> dict:
+        """Events carry the protocol name only in multi-protocol campaigns,
+        so single-protocol event streams stay identical to the seed."""
+        if binding is None or len(self._bindings) <= 1:
+            return {}
+        return {"protocol": binding.name}
 
     # -- submission channel ------------------------------------------------
 
-    def add_pipeline(self, pl: Pipeline, first_task: Optional[Task] = None):
+    def add_pipeline(self, pl: Pipeline, first_task: Optional[Task] = None,
+                     protocol: Union[None, str, DesignProtocol] = None):
+        b = self._binding_of(protocol)
         self.pipelines[pl.uid] = pl
-        task = first_task or self.protocol.first_task(pl)
-        self._enqueue(task)
+        self._pipeline_binding[pl.uid] = b
+        task = first_task or b.protocol.first_task(pl)
+        self._enqueue(b, task)
 
-    def _enqueue(self, task: Task):
-        self._ready.append(task)
+    def _enqueue(self, binding: _ProtocolBinding, task: Task):
+        binding.ready.append(task)
         self._pump()
 
     def _pump(self):
-        while self._ready and (self.max_inflight is None
-                               or self._inflight < self.max_inflight):
-            task = self._ready.pop(0)
-            self._task_pipeline[task.uid] = task.pipeline_id
-            self._inflight += 1
-            self.executor.submit(task)
+        for b in self._bindings:
+            while b.ready and (b.max_inflight is None
+                               or b.inflight < b.max_inflight):
+                task = b.ready.pop(0)
+                self._task_pipeline[task.uid] = task.pipeline_id
+                self._task_binding[task.uid] = b
+                b.inflight += 1
+                self._inflight += 1
+                self.executor.submit(task)
 
     # -- sub-pipelines -------------------------------------------------------
 
-    def _try_spawn(self, spawn: dict):
+    def _try_spawn(self, binding: _ProtocolBinding, spawn: Optional[dict]):
         if spawn is None:
             return
-        self._parked_spawns.append(spawn)
+        binding.parked.append(spawn)
         self._drain_parked()
 
     def _drain_parked(self):
-        still = []
-        for spawn in self._parked_spawns:
-            cfgp = self.protocol.cfg
-            if self.protocol.n_sub_spawned >= cfgp.max_sub_pipelines:
-                continue  # cap reached while parked: drop the proposal
-            idle = self.executor.allocator.n_free > 0
-            if idle:
-                sub = self.protocol.new_pipeline(
-                    spawn["name"], spawn["backbone"], spawn["target"],
-                    spawn["receptor_len"],
-                    peptide_tokens=spawn.get("peptide_tokens"),
-                    parent=spawn["parent"],
-                    seed_candidate=spawn["seed_candidate"])
-                sub.cycle = spawn.get("cycle", 0)
-                if spawn.get("prev_fitness") is not None:
-                    sub.meta["prev_fitness"] = spawn["prev_fitness"]
-                sub.meta["gen_version"] = spawn.get("gen_version", 0)
-                self.protocol.register_sub_spawn()
-                self.events.append({"t": time.monotonic(), "event": "spawn",
-                                    "pipeline": sub.name,
-                                    "gen_version": sub.meta["gen_version"]})
-                self.add_pipeline(sub)
-            else:
-                still.append(spawn)
-        self._parked_spawns = still
+        for b in self._bindings:
+            still = []
+            for spawn in b.parked:
+                if not b.protocol.can_spawn():
+                    continue  # cap reached while parked: drop the proposal
+                if self.executor.allocator.n_free > 0:
+                    sub = b.protocol.spawn_pipeline(spawn)
+                    if sub is None:
+                        continue
+                    self.events.append(dict(
+                        {"t": time.monotonic(), "event": "spawn",
+                         "pipeline": sub.name,
+                         "gen_version": sub.meta.get("gen_version", 0)},
+                        **self._event_tag(b)))
+                    self.add_pipeline(sub, protocol=b.protocol)
+                else:
+                    still.append(spawn)
+            b.parked = still
 
     # -- completion channel ---------------------------------------------------
 
@@ -146,46 +223,45 @@ class Coordinator:
             # already handled via a winning speculative duplicate — even a
             # late FAILED/CANCELED original must not touch the pipeline
             return
+        binding = self._task_binding.get(task.uid)
+        if binding is None and pl is not None:
+            binding = self._pipeline_binding.get(pl.uid)
+        if binding is None and self._bindings:
+            binding = self._bindings[0]
         if task.state in (TaskState.FAILED, TaskState.CANCELED):
-            self.events.append({"t": time.monotonic(),
-                                "event": task.state.value,
-                                "task": task.kind, "error": task.error})
+            self.events.append(dict(
+                {"t": time.monotonic(), "event": task.state.value,
+                 "task": task.kind, "error": task.error},
+                **self._event_tag(binding)))
             if pl is not None and task.state == TaskState.FAILED:
                 pl.active = False
             return
         self._done_task_uids.add(task.uid)
-        if pl is None or not pl.active:
+        if pl is None or not pl.active or binding is None:
             return
-        if task.kind in ("generate", "generate_batch"):
-            if task.kind == "generate_batch":
-                tasks = self.protocol.on_generate_batch_done(pl, task.result)
-            else:
-                tasks = self.protocol.on_generate_done(pl, task.result)
-            for t in tasks:
-                t.pipeline_id = pl.uid
-                self._enqueue(t)
-        elif task.kind in ("predict", "predict_batch"):
-            if task.kind == "predict_batch":
-                out = self.protocol.on_predict_batch_done(pl, task.result)
-            else:
-                out = self.protocol.on_predict_done(pl, task.result)
-            for ev in out.get("events",
-                              [{"event": out["event"], "cycle": pl.cycle}]):
-                self.events.append({"t": time.monotonic(),
-                                    "event": ev["event"],
-                                    "pipeline": pl.name,
-                                    "cycle": ev["cycle"],
-                                    "gen_version": pl.meta.get(
-                                        "gen_version", 0)})
-            for t in out["tasks"]:
-                t.pipeline_id = pl.uid
-                self._enqueue(t)
-            # accepted designs are the §V training data: feed the replay
-            # buffer ("completed" is the final accepted cycle)
-            if self.trainer is not None and pl.history \
-                    and out["event"] in ("accepted", "completed"):
-                self.trainer.add_design(pl.history[-1])
-            self._try_spawn(out["spawn"])
+        handler = binding.protocol.handlers.get(task.kind)
+        if handler is None:
+            self.events.append(dict(
+                {"t": time.monotonic(), "event": "unroutable",
+                 "task": task.kind, "pipeline": pl.name},
+                **self._event_tag(binding)))
+            return
+        decision = handler(pl, task.result)
+        if not isinstance(decision, Decision):   # bare task-list shorthand
+            decision = Decision(tasks=list(decision))
+        for ev in decision.events:
+            self.events.append(dict(
+                {"t": time.monotonic(), "event": ev["event"],
+                 "pipeline": pl.name, "cycle": ev["cycle"],
+                 "gen_version": pl.meta.get("gen_version", 0)},
+                **self._event_tag(binding)))
+        for t in decision.tasks:
+            t.pipeline_id = pl.uid
+            self._enqueue(binding, t)
+        # designs the protocol declares accepted are the §V training data
+        if self.trainer is not None and decision.accepted_design is not None:
+            self.trainer.add_design(decision.accepted_design)
+        self._try_spawn(binding, decision.spawn)
 
     # -- main loop --------------------------------------------------------------
 
@@ -195,12 +271,13 @@ class Coordinator:
             if self.trainer is not None:
                 self.trainer.tick()   # opportunistic model evolution
             active = any(p.active for p in self.pipelines.values())
-            if not active and self._inflight == 0 and not self._ready \
+            if not active and self._inflight == 0 \
+                    and not any(b.ready for b in self._bindings) \
                     and (self.trainer is None or not self.trainer.busy()):
                 break
             task = self.executor.drain(timeout=0.05)
             if task is None:
-                if self._inflight == 0 and self._ready:
+                if self._inflight == 0:
                     self._pump()
                 continue
             if self.trainer is not None and self.trainer.owns(task.uid):
@@ -210,6 +287,9 @@ class Coordinator:
                 continue
             if task.speculative_of is None:
                 self._inflight -= 1
+                b = self._task_binding.get(task.uid)
+                if b is not None:
+                    b.inflight -= 1
             self._handle(task)
             self._pump()
             self._drain_parked()
@@ -217,12 +297,13 @@ class Coordinator:
 
     # -- reporting ------------------------------------------------------------
 
-    def _quality_by_version(self) -> Dict[int, dict]:
+    @staticmethod
+    def _quality_by_version(pls: List[Pipeline]) -> Dict[int, dict]:
         """Accepted-design quality grouped by the generator version that
         produced each design — the paper's 'increased consistency in the
         quality of protein design' measured directly against evolution."""
         by_v: Dict[int, List[float]] = {}
-        for p in self.pipelines.values():
+        for p in pls:
             for h in p.history:
                 by_v.setdefault(int(h.get("gen_version", 0)), []).append(
                     float(h["fitness"]))
@@ -232,11 +313,8 @@ class Coordinator:
                     "fitness_std": float(np.std(fs))}
                 for v, fs in sorted(by_v.items())}
 
-    def report(self, makespan: float) -> dict:
-        pls = list(self.pipelines.values())
-        top = [p for p in pls if not p.is_sub_pipeline]
-        subs = [p for p in pls if p.is_sub_pipeline]
-        trajectories = sum(p.meta["trajectories"] for p in pls)
+    @staticmethod
+    def _cycle_stats(pls: List[Pipeline]) -> Dict[int, dict]:
         per_cycle: Dict[int, List[dict]] = {}
         for p in pls:
             for h in p.history:
@@ -253,10 +331,34 @@ class Coordinator:
                 "pae_std": float(np.std([h["pae"] for h in hs])),
                 "n": len(hs),
             }
+        return cycles
+
+    @staticmethod
+    def _pool_summary(pls: List[Pipeline]) -> dict:
+        top = [p for p in pls if not p.is_sub_pipeline]
+        subs = [p for p in pls if p.is_sub_pipeline]
         return {
             "n_pipelines": len(top),
             "n_sub_pipelines": len(subs),
-            "trajectories": trajectories,
+            "trajectories": sum(p.meta.get("trajectories", 0) for p in pls),
+        }
+
+    def _binding_pipelines(self, binding: _ProtocolBinding) -> List[Pipeline]:
+        return [p for p in self.pipelines.values()
+                if self._pipeline_binding.get(p.uid, self._bindings[0])
+                is binding]
+
+    def report(self, makespan: float) -> dict:
+        pls = list(self.pipelines.values())
+        per_protocol = {}
+        if self._bindings:
+            for b in self._bindings:
+                bpls = self._binding_pipelines(b)
+                per_protocol[b.name] = dict(
+                    self._pool_summary(bpls),
+                    cycles=self._cycle_stats(bpls),
+                    quality_by_version=self._quality_by_version(bpls))
+        return dict(self._pool_summary(pls), **{
             "makespan_s": makespan,
             "utilization": self.executor.allocator.utilization(),
             "executor": self.executor.stats(),
@@ -267,46 +369,61 @@ class Coordinator:
                                     if self._gen_occupancy else None),
             "n_generate_batches": len(self._gen_occupancy),
             "allocator_shapes": self.executor.allocator.shape_stats(),
-            "quality_by_version": self._quality_by_version(),
+            "quality_by_version": self._quality_by_version(pls),
             "evolution": (None if self.trainer is None else
                           self.trainer.report(
                               makespan=makespan,
                               total_devices=self.executor
                               .allocator.total_devices)),
-            "cycles": cycles,
+            "cycles": self._cycle_stats(pls),
+            "protocols": per_protocol,
             "events": self.events,
-        }
+        })
 
     # -- checkpoint/restart -----------------------------------------------------
 
     def state_dict(self) -> dict:
+        """Versioned, JSON-serializable campaign state. Pipelines serialize
+        through their owning protocol (``DesignProtocol.pipeline_state``)
+        and carry the protocol binding name; protocol-level state (e.g.
+        spawn counters) is stored per binding."""
+        recs = []
+        for b in self._bindings:
+            for p in self._binding_pipelines(b):
+                recs.append(dict(b.protocol.pipeline_state(p),
+                                 protocol=b.name))
         return {
-            "pipelines": [{
-                "name": p.name, "uid": p.uid, "parent": p.parent,
-                "cycle": p.cycle, "active": p.active,
-                "history": p.history,
-                "meta": {k: (v.tolist() if isinstance(v, np.ndarray) else
-                             ([x.tolist() for x in v] if isinstance(v, tuple)
-                              else v))
-                         for k, v in p.meta.items()},
-            } for p in self.pipelines.values()],
-            "n_sub_spawned": self.protocol.n_sub_spawned,
+            "version": 2,
+            "protocols": {b.name: b.protocol.state_dict()
+                          for b in self._bindings},
+            "pipelines": recs,
         }
 
     def load_state_dict(self, state: dict):
-        self.protocol.n_sub_spawned = state["n_sub_spawned"]
-        for rec in state["pipelines"]:
-            meta = dict(rec["meta"])
-            meta["backbone"] = np.asarray(meta["backbone"], np.float32)
-            meta["target"] = np.asarray(meta["target"], np.float32)
-            if meta.get("candidates"):
-                seqs, lls = meta["candidates"]
-                meta["candidates"] = (np.asarray(seqs, np.int32),
-                                      np.asarray(lls, np.float32))
-            pl = Pipeline(name=rec["name"], parent=rec["parent"], meta=meta)
-            pl.cycle = rec["cycle"]
-            pl.active = rec["active"]
-            pl.history = rec["history"]
+        if "version" not in state:   # legacy (pre-v2) single-protocol form
+            self._binding_of(None).protocol.load_state_dict(
+                {"n_sub_spawned": state["n_sub_spawned"]})
+            records = [(self._bindings[0], rec)
+                       for rec in state["pipelines"]]
+        else:
+            for name, ps in state["protocols"].items():
+                self._lookup(name).protocol.load_state_dict(ps)
+            records = [(self._lookup(rec.get("protocol")), rec)
+                       for rec in state["pipelines"]]
+        for b, rec in records:
+            pl = b.protocol.restore_pipeline(rec)
             self.pipelines[pl.uid] = pl
+            self._pipeline_binding[pl.uid] = b
             if pl.active:
-                self._enqueue(self.protocol.first_task(pl))
+                self._enqueue(b, b.protocol.first_task(pl))
+
+    def _lookup(self, name: Optional[str]) -> _ProtocolBinding:
+        """Binding by checkpoint name, falling back to the default binding
+        when the restoring coordinator registered under a different name
+        (single-protocol restores stay permissive)."""
+        if name in self._by_name:
+            return self._by_name[name]
+        if len(self._bindings) == 1:
+            return self._bindings[0]
+        raise KeyError(f"checkpoint references protocol {name!r} but no "
+                       f"binding with that name is registered")

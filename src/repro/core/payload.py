@@ -344,17 +344,19 @@ class ProteinPayload:
         gen_batch_log.append(batch)
         return {"rows": rows, "batch": dict(batch), "gen_version": ver}
 
-    def register_all(self, executor, generate_batch_rows: int = None):
+    def register_all(self, executor, generate_batch_rows: int = None,
+                     coalesce: bool = True):
         """Register every task fn (and, when the executor supports it, the
         batched kinds' coalesce rules). ``generate_batch_rows`` bounds the
         fused generate batch — pass ``ProtocolConfig.generate_batch_size``
         so the config's 'up to this many rows per device batch' contract
-        holds; None keeps the BATCH_BUCKETS cap."""
+        holds; None keeps the BATCH_BUCKETS cap. ``coalesce=False`` skips
+        the coalesce rules (benchmark baselines register their own)."""
         executor.register("generate", self.generate)
         executor.register("generate_batch", self.generate_batch)
         executor.register("predict", self.predict)
         executor.register("predict_batch", self.predict_batch)
-        if hasattr(executor, "register_coalescable"):
+        if coalesce and hasattr(executor, "register_coalescable"):
             executor.register_coalescable("predict_batch",
                                           predict_batch_coalesce_rule())
             executor.register_coalescable(

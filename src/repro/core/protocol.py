@@ -48,6 +48,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.api import Decision, DesignProtocol, revive_design_meta
 from repro.core.pipeline import Pipeline, ResourceRequest, Task
 
 AA = 20
@@ -79,9 +80,14 @@ def fitness(metrics: Dict[str, float]) -> float:
     return metrics["plddt"] / 100.0 + metrics["ptm"] - metrics["pae"] / 30.0
 
 
-class ImpressProtocol:
+class ImpressProtocol(DesignProtocol):
     """Pure decision logic: consumes task completions, emits new tasks.
-    No threads, no devices — fully unit-testable."""
+    No threads, no devices — fully unit-testable.
+
+    Task completions are routed through the ``DesignProtocol`` typed
+    registry: ``handlers[kind]`` wraps the corresponding ``on_*_done``
+    method (kept as the stable, directly-testable decision API) into a
+    ``Decision`` for the coordinator."""
 
     def __init__(self, cfg: ProtocolConfig, feat_dim: int = 16):
         self.cfg = cfg
@@ -90,6 +96,38 @@ class ImpressProtocol:
         # fixed AA embedding used for the structure update (stage 6 -> 1 loop)
         self._aa_emb = rng.normal(size=(AA + 12, feat_dim)).astype(np.float32)
         self.n_sub_spawned = 0
+        self.handlers = {
+            "generate": self._route_generate,
+            "generate_batch": self._route_generate_batch,
+            "predict": self._route_predict,
+            "predict_batch": self._route_predict_batch,
+        }
+
+    # -- typed completion routing (DesignProtocol.handlers) ----------------
+
+    def _route_generate(self, pl: Pipeline, result) -> Decision:
+        return Decision(tasks=self.on_generate_done(pl, result))
+
+    def _route_generate_batch(self, pl: Pipeline, result) -> Decision:
+        return Decision(tasks=self.on_generate_batch_done(pl, result))
+
+    def _route_predict(self, pl: Pipeline, result) -> Decision:
+        return self._to_decision(pl, self.on_predict_done(pl, result))
+
+    def _route_predict_batch(self, pl: Pipeline, result) -> Decision:
+        return self._to_decision(pl, self.on_predict_batch_done(pl, result))
+
+    def _to_decision(self, pl: Pipeline, out: Dict[str, Any]) -> Decision:
+        """Stage-6 outcome dict -> Decision. Accepted designs are the §V
+        training data ("completed" is the final accepted cycle), declared
+        explicitly so the coordinator needs no event-name knowledge."""
+        d = Decision(tasks=out["tasks"], spawn=out["spawn"],
+                     events=out.get("events",
+                                    [{"event": out["event"],
+                                      "cycle": pl.cycle}]))
+        if out["event"] in ("accepted", "completed") and pl.history:
+            d.accepted_design = pl.history[-1]
+        return d
 
     # -- pipeline bootstrap ------------------------------------------------
 
@@ -328,6 +366,39 @@ class ImpressProtocol:
 
     def register_sub_spawn(self):
         self.n_sub_spawned += 1
+
+    # -- sub-pipelines (DesignProtocol hooks) --------------------------------
+
+    def can_spawn(self) -> bool:
+        return self.n_sub_spawned < self.cfg.max_sub_pipelines
+
+    def spawn_pipeline(self, spawn: dict) -> Optional[Pipeline]:
+        """Materialize a runner-up spawn proposal (built by ``_decide``)
+        into a sub-pipeline, inheriting the parent's cycle, accepted
+        fitness bar, and generator provenance."""
+        sub = self.new_pipeline(
+            spawn["name"], spawn["backbone"], spawn["target"],
+            spawn["receptor_len"],
+            peptide_tokens=spawn.get("peptide_tokens"),
+            parent=spawn["parent"],
+            seed_candidate=spawn["seed_candidate"])
+        sub.cycle = spawn.get("cycle", 0)
+        if spawn.get("prev_fitness") is not None:
+            sub.meta["prev_fitness"] = spawn["prev_fitness"]
+        sub.meta["gen_version"] = spawn.get("gen_version", 0)
+        self.register_sub_spawn()
+        return sub
+
+    # -- checkpoint (DesignProtocol hooks) -----------------------------------
+
+    def state_dict(self) -> dict:
+        return {"n_sub_spawned": self.n_sub_spawned}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.n_sub_spawned = state["n_sub_spawned"]
+
+    def revive_meta(self, meta: dict) -> dict:
+        return revive_design_meta(meta)
 
     # -- structure feedback (stage 6 -> stage 1 loop) ------------------------
 

@@ -1,7 +1,17 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Serving drivers: LM token serving and design-campaign serving.
+
+LM mode (default) prefills a batch of prompts, then decodes:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \\
       --batch 4 --prompt-len 32 --gen 16
+
+Campaign mode runs a declarative design campaign through the
+``ImpressSession`` facade — protocol kinds are spec-addressable, so one
+flag serves IM-RP, the CONT-V control, the multi-objective demo, or any
+mix of them concurrently on one pilot:
+
+  PYTHONPATH=src python -m repro.launch.serve --campaign im-rp,cont-v \\
+      --structures 4 --cycles 3 [--evolution]
 """
 
 from __future__ import annotations
@@ -57,6 +67,21 @@ def serve_batch(cfg, *, batch, prompt_len, gen, temperature=0.0, seed=0):
     }
 
 
+def serve_campaign(*, protocols, structures, cycles, candidates,
+                   receptor_len, evolution, timeout=600.0):
+    """Run a design campaign through the session facade and return its
+    versioned report."""
+    from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
+    spec = CampaignSpec(
+        structures=structures, receptor_len=receptor_len,
+        protocols=tuple(ProtocolSpec(kind, n_candidates=candidates,
+                                     n_cycles=cycles)
+                        for kind in protocols),
+        evolution=evolution, timeout=timeout)
+    with ImpressSession(spec) as session:
+        return session.run()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -64,7 +89,30 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--campaign", default=None, metavar="KINDS",
+                    help="serve a design campaign instead: comma-separated "
+                         "protocol kinds (e.g. im-rp,cont-v)")
+    ap.add_argument("--structures", type=int, default=2)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--candidates", type=int, default=5)
+    ap.add_argument("--receptor-len", type=int, default=20)
+    ap.add_argument("--evolution", action="store_true",
+                    help="campaign mode: online model evolution (§V)")
     args = ap.parse_args()
+    if args.campaign:
+        rep = serve_campaign(protocols=args.campaign.split(","),
+                             structures=args.structures, cycles=args.cycles,
+                             candidates=args.candidates,
+                             receptor_len=args.receptor_len,
+                             evolution=args.evolution)
+        print(f"[serve] campaign schema v{rep.schema_version}: "
+              f"{rep.trajectories} trajectories in {rep.makespan_s:.1f}s, "
+              f"utilization {100 * rep.utilization:.0f}%")
+        for name, p in rep.protocols.items():
+            print(f"[serve]   {name}: {p['n_pipelines']} pipelines "
+                  f"(+{p['n_sub_pipelines']} subs), "
+                  f"{p['trajectories']} trajectories")
+        return
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     r = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
                     gen=args.gen)

@@ -117,6 +117,12 @@ class AsyncExecutor:
         """Allow queued tasks of ``kind`` to fuse into shared dispatches."""
         self._coalesce[kind] = rule
 
+    def registered_kinds(self) -> frozenset:
+        """Task kinds with a registered payload fn — lets callers (the
+        session facade) validate a protocol's handler registry against the
+        executor before a campaign starts."""
+        return frozenset(self._fns)
+
     def submit(self, task: Task):
         with self._lock:
             self._tasks[task.uid] = task

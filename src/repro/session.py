@@ -1,0 +1,366 @@
+"""Declarative campaign facade: one spec in, one versioned report out.
+
+Every entry point used to hand-assemble allocator → executor → payload
+registry → protocol → trainer → coordinator in ~40 lines of boilerplate.
+``ImpressSession`` replaces that with a single declarative ``CampaignSpec``:
+
+    from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
+
+    spec = CampaignSpec(structures=4, receptor_len=24,
+                        protocols=(ProtocolSpec("im-rp", n_cycles=3),
+                                   ProtocolSpec("cont-v", n_cycles=3)),
+                        evolution=True)
+    with ImpressSession(spec) as session:
+        report = session.run()          # -> CampaignReport (schema v1)
+
+The session wires the middleware, registers every protocol with the
+multi-protocol coordinator (IM-RP and CONT-V — the paper's comparison —
+run *concurrently on one executor/allocator*, so cross-protocol task
+coalescing applies under mixed load), validates each protocol's typed
+handler registry against the executor's registered payload fns, owns
+shutdown, and exposes checkpoint()/restore() for the whole campaign.
+
+Protocol kinds are pluggable: ``register_protocol`` maps a kind name to a
+factory, so new ``DesignProtocol`` implementations (see ``core/api.py``)
+become spec-addressable without touching this file's built-ins
+("im-rp", "cont-v", "multi-objective").
+
+Migration note — the pre-facade wiring still works unchanged
+(``Coordinator(executor, protocol, max_inflight=...)`` is kept as a thin
+shim), but new code should build campaigns through this module.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import (Coordinator, DesignProtocol, ImpressProtocol,
+                        MultiObjectiveConfig, MultiObjectiveProtocol,
+                        ProteinPayload, ProtocolConfig)
+from repro.core.payload import FinetunePayload
+from repro.data import protein_design_tasks
+from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService
+from repro.runtime import AsyncExecutor, DeviceAllocator
+
+SCHEMA_VERSION = 1   # CampaignReport / checkpoint schema
+
+
+@dataclass(frozen=True)
+class ProtocolSpec:
+    """One protocol entry of a campaign. ``kind`` selects a registered
+    factory ("im-rp", "cont-v", "multi-objective", or anything added via
+    ``register_protocol``); the remaining fields parameterize it. ``seed``
+    of None inherits the campaign seed, so an IM-RP/CONT-V pair in one
+    spec starts from identical sampling streams."""
+    kind: str = "im-rp"
+    name: Optional[str] = None        # binding name; defaults to kind
+    n_candidates: int = 6
+    n_cycles: int = 3
+    max_reselections: int = 10
+    max_sub_pipelines: int = 4
+    score_batch: int = 0
+    generate_batch_size: int = 0
+    gen_devices: int = 1
+    predict_devices: int = 1
+    temperature: float = 1.0
+    seed: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class CampaignSpec:
+    """Everything a campaign needs, declaratively: the starting structures,
+    the protocol mix, batching/evolution switches, and the device budget."""
+    structures: int = 2
+    receptor_len: int = 24
+    peptide_len: int = 6
+    protocols: Tuple = (ProtocolSpec(),)   # ProtocolSpec entries or kind strs
+    # -- model evolution (§V) --
+    evolution: bool = False
+    finetune_every: int = 2
+    finetune_steps: int = 12
+    finetune_lr: float = 1e-3
+    finetune_batch: int = 8
+    min_designs: int = 2
+    replay_capacity: int = 128
+    trainer_max_devices: int = 4
+    # -- runtime --
+    device_budget: Optional[int] = None    # first N devices; None = all
+    max_workers: int = 4
+    max_retries: int = 1
+    straggler_factor: Optional[float] = None
+    coalesce: bool = True                  # register the coalesce rules
+    reduced: bool = True                   # reduced-scale payload models
+    seed: int = 0
+    timeout: float = 600.0
+
+
+# -- protocol-kind registry (pluggable) ------------------------------------
+
+ProtocolFactory = Callable[[ProtocolSpec, CampaignSpec],
+                           Tuple[DesignProtocol, Optional[int]]]
+_FACTORIES: Dict[str, ProtocolFactory] = {}
+
+
+def register_protocol(kind: str, factory: ProtocolFactory):
+    """Make ``kind`` spec-addressable. ``factory(protocol_spec, campaign
+    _spec) -> (protocol, max_inflight)`` — max_inflight None = unbounded."""
+    _FACTORIES[kind] = factory
+
+
+def _impress_cfg(ps: ProtocolSpec, cs: CampaignSpec, *, adaptive: bool
+                 ) -> ProtocolConfig:
+    return ProtocolConfig(
+        n_candidates=ps.n_candidates, n_cycles=ps.n_cycles,
+        adaptive=adaptive,
+        max_reselections=ps.max_reselections,
+        max_sub_pipelines=ps.max_sub_pipelines if adaptive else 0,
+        score_batch=ps.score_batch,
+        generate_batch_size=ps.generate_batch_size,
+        gen_devices=ps.gen_devices, predict_devices=ps.predict_devices,
+        temperature=ps.temperature,
+        seed=cs.seed if ps.seed is None else ps.seed)
+
+
+register_protocol("im-rp", lambda ps, cs: (
+    ImpressProtocol(_impress_cfg(ps, cs, adaptive=True)), None))
+# the sequential control: strictly one task in flight, no adaptivity
+register_protocol("cont-v", lambda ps, cs: (
+    ImpressProtocol(_impress_cfg(ps, cs, adaptive=False)), 1))
+register_protocol("multi-objective", lambda ps, cs: (
+    MultiObjectiveProtocol(MultiObjectiveConfig(
+        n_candidates=ps.n_candidates, n_cycles=ps.n_cycles,
+        max_declines=ps.max_reselections,
+        gen_devices=ps.gen_devices, predict_devices=ps.predict_devices,
+        temperature=ps.temperature,
+        seed=cs.seed if ps.seed is None else ps.seed)), None))
+
+
+def _normalize_protocols(spec: CampaignSpec) -> List[ProtocolSpec]:
+    out = []
+    for p in spec.protocols:
+        if isinstance(p, str):
+            p = ProtocolSpec(kind=p)
+        elif isinstance(p, dict):
+            p = ProtocolSpec(**p)
+        out.append(p)
+    return out
+
+
+# -- the report -------------------------------------------------------------
+
+@dataclass
+class CampaignReport:
+    """Stable, versioned campaign result. ``protocols`` holds one
+    per-protocol section (pipelines, trajectories, cycles, quality);
+    campaign-wide aggregates mirror the coordinator report. ``raw`` keeps
+    the full coordinator report; ``report[key]`` reads from it, so report
+    consumers written against the coordinator dict keep working."""
+    schema_version: int
+    makespan_s: float
+    utilization: float
+    n_pipelines: int
+    n_sub_pipelines: int
+    trajectories: int
+    protocols: Dict[str, dict]
+    cycles: Dict[int, dict]
+    quality_by_version: Dict[int, dict]
+    executor: dict
+    evolution: Optional[dict]
+    events: List[dict]
+    raw: dict = field(repr=False, default_factory=dict)
+
+    @classmethod
+    def from_raw(cls, raw: dict) -> "CampaignReport":
+        return cls(
+            schema_version=SCHEMA_VERSION,
+            makespan_s=raw["makespan_s"], utilization=raw["utilization"],
+            n_pipelines=raw["n_pipelines"],
+            n_sub_pipelines=raw["n_sub_pipelines"],
+            trajectories=raw["trajectories"], protocols=raw["protocols"],
+            cycles=raw["cycles"],
+            quality_by_version=raw["quality_by_version"],
+            executor=raw["executor"], evolution=raw["evolution"],
+            events=raw["events"], raw=raw)
+
+    def __getitem__(self, key):
+        return self.raw[key]
+
+    def to_dict(self) -> dict:
+        return dict(self.raw, schema_version=self.schema_version)
+
+
+# -- the facade -------------------------------------------------------------
+
+class ImpressSession:
+    """Build and run a design campaign from one ``CampaignSpec``.
+
+    Wiring (allocator, executor, payload registry, optional trainer,
+    multi-protocol coordinator) happens in the constructor; pipelines for
+    the starting structures are created lazily on the first ``run()``.
+    The session is a context manager — leaving the block shuts the
+    executor down. ``payload``/``devices`` injection is for benchmarks and
+    tests that share a compiled-payload cache or fake the device grid.
+    """
+
+    def __init__(self, spec: CampaignSpec, *, payload=None, devices=None):
+        import jax
+        self.spec = spec
+        self.protocol_specs = _normalize_protocols(spec)
+        # validate the spec before paying for threads or payload compiles
+        unknown = [ps.kind for ps in self.protocol_specs
+                   if ps.kind not in _FACTORIES]
+        if unknown:
+            raise ValueError(
+                f"unknown protocol kind(s) {unknown}; registered: "
+                f"{sorted(_FACTORIES)} (add via register_protocol)")
+        devs = list(devices if devices is not None else jax.devices())
+        if spec.device_budget:
+            devs = devs[:spec.device_budget]
+        self.allocator = DeviceAllocator(devs)
+        self.executor = AsyncExecutor(
+            self.allocator, max_workers=spec.max_workers,
+            max_retries=spec.max_retries,
+            straggler_factor=spec.straggler_factor)
+        self._shutdown = False
+        try:
+            self._build(spec, payload, jax)
+        except Exception:
+            # never leak worker/watchdog threads from a failed constructor
+            self.shutdown()
+            raise
+
+    def _build(self, spec: CampaignSpec, payload, jax):
+        t0 = time.monotonic()
+        self.payload = payload if payload is not None else ProteinPayload(
+            jax.random.PRNGKey(spec.seed), reduced=spec.reduced,
+            length=spec.receptor_len)
+        gbs = max((ps.generate_batch_size for ps in self.protocol_specs),
+                  default=0)
+        self.payload.register_all(self.executor,
+                                  generate_batch_rows=gbs or None,
+                                  coalesce=spec.coalesce)
+        self.bootstrap_s = time.monotonic() - t0   # payload + registry setup
+        self.buffer = None
+        self.trainer = None
+        if spec.evolution:
+            FinetunePayload(self.payload, lr=spec.finetune_lr,
+                            steps=spec.finetune_steps,
+                            ).register(self.executor)
+            self.buffer = ReplayBuffer(capacity=spec.replay_capacity)
+            self.trainer = TrainerService(
+                self.executor, self.buffer, self.payload.param_store,
+                EvolutionConfig(finetune_every=spec.finetune_every,
+                                min_designs=spec.min_designs,
+                                batch_size=spec.finetune_batch,
+                                steps=spec.finetune_steps,
+                                max_devices=spec.trainer_max_devices,
+                                seed=spec.seed))
+        self.coordinator = Coordinator(self.executor, trainer=self.trainer)
+        self.protocols: Dict[str, DesignProtocol] = {}
+        registered = self.executor.registered_kinds()
+        for ps in self.protocol_specs:
+            proto, max_inflight = _FACTORIES[ps.kind](ps, spec)
+            missing = [k for k in proto.task_kinds() if k not in registered]
+            if missing:
+                raise ValueError(
+                    f"protocol {ps.kind!r} routes task kinds {missing} "
+                    f"with no registered payload fn")
+            name = ps.name or ps.kind
+            self.coordinator.add_protocol(proto, name=name,
+                                          max_inflight=max_inflight)
+            self.protocols[name] = proto
+        self._populated = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def __enter__(self) -> "ImpressSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def shutdown(self):
+        if not self._shutdown:
+            self.executor.shutdown()
+            self._shutdown = True
+
+    # -- pipelines ---------------------------------------------------------
+
+    def _populate(self):
+        """One pipeline per (protocol, starting structure). Every protocol
+        sees the same structures, so a multi-protocol campaign is a
+        controlled comparison; names are prefixed with the binding name
+        only when the campaign runs more than one protocol."""
+        structures = protein_design_tasks(
+            self.spec.structures, receptor_len=self.spec.receptor_len,
+            peptide_len=self.spec.peptide_len, seed=self.spec.seed)
+        multi = len(self.protocols) > 1
+        for name, proto in self.protocols.items():
+            for t in structures:
+                pl_name = f"{name}/{t['name']}" if multi else t["name"]
+                pl = proto.new_pipeline(pl_name, t["backbone"], t["target"],
+                                        t["receptor_len"],
+                                        t["peptide_tokens"])
+                self.coordinator.add_pipeline(pl, protocol=name)
+        self._populated = True
+
+    # -- run ---------------------------------------------------------------
+
+    def run(self, timeout: Optional[float] = None) -> CampaignReport:
+        if not self.protocols:
+            raise ValueError("CampaignSpec.protocols is empty")
+        if not self._populated:
+            self._populate()
+        raw = self.coordinator.run(
+            timeout=self.spec.timeout if timeout is None else timeout)
+        return CampaignReport.from_raw(raw)
+
+    # -- checkpoint / restore ----------------------------------------------
+
+    def checkpoint(self) -> dict:
+        """JSON-serializable campaign snapshot: the spec, the coordinator's
+        multi-protocol state (pipelines serialized by their owning
+        protocol), and the generator-version watermark. Model parameters
+        themselves persist separately via ``checkpoint.manager`` /
+        ``ParamStore.save``."""
+        store = getattr(self.payload, "param_store", None)
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "spec": asdict(self.spec),
+            "coordinator": self.coordinator.state_dict(),
+            "gen_version": store.version if store is not None else 0,
+        }
+
+    def restore(self, state: dict):
+        """Load a ``checkpoint()`` snapshot into this session: pipelines
+        are rebuilt under their protocol bindings and active ones resume
+        from their protocol's ``first_task``."""
+        if state.get("schema_version", 1) > SCHEMA_VERSION:
+            raise ValueError(
+                f"checkpoint schema {state['schema_version']} is newer "
+                f"than this session's ({SCHEMA_VERSION})")
+        want = int(state.get("gen_version", 0))
+        store = getattr(self.payload, "param_store", None)
+        if store is not None and store.version < want:
+            import warnings
+            warnings.warn(
+                f"checkpoint was taken at generator version {want} but "
+                f"this session's ParamStore is at {store.version}; restore "
+                f"the evolved params too (ParamStore.save/restore via "
+                f"checkpoint.manager) or resumed provenance will be wrong",
+                RuntimeWarning, stacklevel=2)
+        self.coordinator.load_state_dict(state["coordinator"])
+        self._populated = True
+
+    @classmethod
+    def from_checkpoint(cls, state: dict, **kwargs) -> "ImpressSession":
+        """Rebuild a session from a ``checkpoint()`` snapshot (the spec is
+        embedded) and restore its campaign state."""
+        sd = dict(state["spec"])
+        sd["protocols"] = tuple(ProtocolSpec(**p) if isinstance(p, dict)
+                                else p for p in sd["protocols"])
+        sess = cls(CampaignSpec(**sd), **kwargs)
+        sess.restore(state)
+        return sess

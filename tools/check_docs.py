@@ -6,10 +6,12 @@
   2. the tier-1 verify command shown in README.md is exactly the one
      ROADMAP.md declares,
   3. every package under src/repro/ appears in README's source map (a new
-     package must be documented), and
+     package must be documented),
   4. docs/ARCHITECTURE.md keeps its required walkthrough sections
-     (pipeline lifecycle, task flow, batching, model evolution, adding a
-     task kind).
+     (pipeline lifecycle, API layers, task flow, batching, model
+     evolution, adding a task kind), and
+  5. the campaign-API modules (session.py, core/api.py) are documented by
+     name in both README.md and docs/ARCHITECTURE.md.
 
   python tools/check_docs.py
 """
@@ -29,11 +31,16 @@ VERIFY_RE = re.compile(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`")
 # section headings docs/ARCHITECTURE.md must keep (## level, any numbering)
 ARCH_SECTIONS = [
     "Pipeline lifecycle",
+    "API layers",
     "Task flow",
     "Batching and coalescing",
     "Model evolution",
     "Adding a new task kind",
 ]
+
+# campaign-API modules every doc must reference by name: the facade and
+# the DesignProtocol interface are the public surface of the repo
+API_MODULES = ["session.py", "core/api.py"]
 
 
 def repro_packages():
@@ -86,13 +93,23 @@ def main() -> int:
                 f"docs/ARCHITECTURE.md: required section heading "
                 f"missing -> {section!r}")
 
+    for mod in API_MODULES:
+        if not (ROOT / "src" / "repro" / mod).exists():
+            errors.append(f"src/repro/{mod}: campaign-API module missing")
+        for doc, text in (("README.md", readme),
+                          ("docs/ARCHITECTURE.md", arch)):
+            if mod not in text:
+                errors.append(f"{doc}: campaign-API module {mod} is not "
+                              f"documented (mention it by name)")
+
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
         n = sum(len(list(internal_links(ROOT / d))) for d in DOCS)
         print(f"check_docs: OK ({n} internal links, verify command in "
               f"sync, {len(repro_packages())} packages mapped, "
-              f"{len(ARCH_SECTIONS)} architecture sections present)")
+              f"{len(ARCH_SECTIONS)} architecture sections present, "
+              f"{len(API_MODULES)} campaign-API modules documented)")
     return 1 if errors else 0
 
 
