@@ -10,12 +10,26 @@ protocol kind carries ``max_inflight=1``).
 
 from __future__ import annotations
 
+import json
+import time
 from functools import lru_cache
 
 import jax
 
 from repro.core.payload import clear_compile_log, compile_log
 from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
+
+
+def write_bench_json(path: str, record: dict):
+    """Persist a benchmark's machine-readable result record (the repo's
+    perf trajectory across PRs — ``benchmarks/run.py`` emits
+    ``BENCH_scoring.json`` / ``BENCH_generate.json``)."""
+    record = dict(record, unix_time=time.time(),
+                  n_devices=len(jax.devices()))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 def run_impress(adaptive: bool, *, n_structures=4, n_cycles=4,

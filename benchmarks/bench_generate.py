@@ -103,7 +103,7 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length):
     return dt, stats
 
 
-def main(emit=print):
+def main(emit=print, argv=None):
     # Defaults model the steady state continuous batching targets: many
     # concurrent pipelines, each sampling a small candidate set per cycle
     # (so per-dispatch overhead dominates the per-pipeline baseline), with
@@ -115,7 +115,10 @@ def main(emit=print):
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + single repeat (CI)")
-    args = ap.parse_args()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable result record "
+                         "(BENCH_generate.json)")
+    args = ap.parse_args(argv)
     if min(args.n_candidates, args.pipelines, args.length,
            args.repeats) < 1:
         ap.error("--n-candidates/--pipelines/--length/--repeats must be >= 1")
@@ -153,6 +156,20 @@ def main(emit=print):
     speedup = results["continuous"][0] / base
     print(f"# continuous vs per-pipeline at pipelines={n_pipe}: "
           f"{speedup:.2f}x {'(>= 3x target met)' if speedup >= 3 else ''}")
+    if args.json:
+        try:
+            from benchmarks._impress import write_bench_json
+        except ImportError:
+            from _impress import write_bench_json
+        cont_occ = results["continuous"][1]["occupancy"]
+        write_bench_json(args.json, {
+            "bench": "generate", "schema": 1, "smoke": bool(args.smoke),
+            "n_candidates": n_cand, "pipelines": n_pipe, "length": length,
+            "seqs_per_sec": {m: results[m][0] for m in MODES},
+            "speedup_vs_per_pipeline": {
+                m: results[m][0] / base for m in MODES},
+            "occupancy": (float(np.mean(cont_occ)) if cont_occ else None),
+        })
     return speedup
 
 

@@ -1,7 +1,11 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-table. Prints ``name,us_per_call,derived`` CSV lines.
+table, plus the throughput benchmarks for the two batched hot stages.
+Prints ``name,us_per_call,derived`` CSV lines; the ``scoring`` and
+``generate`` entries additionally write machine-readable
+``BENCH_scoring.json`` / ``BENCH_generate.json`` records (candidates/sec,
+occupancy, speedup vs baseline) — the repo's perf trajectory across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1,fig2,...]
+  PYTHONPATH=src python -m benchmarks.run [--only table1,scoring,...]
 """
 
 import argparse
@@ -12,7 +16,8 @@ def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution")
+BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution",
+           "scoring", "generate")
 
 
 def main() -> None:
@@ -42,6 +47,15 @@ def main() -> None:
     if "evolution" in only:
         from benchmarks import bench_evolution
         bench_evolution.main(emit)
+    if "scoring" in only:
+        from benchmarks import bench_scoring
+        # these two emit their own mode,value,derived CSV lines
+        bench_scoring.main(print, argv=["--json", "BENCH_scoring.json"])
+        bench_scoring.main(print, argv=["--mixed-lengths", "--json",
+                                        "BENCH_scoring_mixed.json"])
+    if "generate" in only:
+        from benchmarks import bench_generate
+        bench_generate.main(print, argv=["--json", "BENCH_generate.json"])
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

@@ -22,7 +22,8 @@ possible"), otherwise they are parked and retried on the next completion.
 
 Batched completions: ``predict_batch`` and ``generate_batch`` tasks complete
 with their pipeline's row slice of a (possibly cross-pipeline fused) device
-batch; bucket occupancy is tracked per dispatch leader and reported
+batch; bucket occupancy — and, for masked length-bucketed dispatches, token
+fill (``len_occupancy``) — is tracked per dispatch leader and reported
 alongside the allocator's row-proportional shape stats.
 
 Model evolution (paper §V): with a ``TrainerService`` attached, every
@@ -82,6 +83,10 @@ class Coordinator:
         self._done_task_uids: set = set()
         self._occupancy: List[float] = []   # predict_batch bucket occupancy
         self._gen_occupancy: List[float] = []  # generate_batch occupancy
+        # token fill of masked length-bucketed dispatches (real tokens /
+        # padded tokens), per kind; legacy exact-length dispatches are 1.0
+        self._len_occupancy: List[float] = []
+        self._gen_len_occupancy: List[float] = []
         if protocol is not None:  # legacy single-protocol shim
             self.add_protocol(protocol, max_inflight=max_inflight)
 
@@ -202,8 +207,12 @@ class Coordinator:
             return
         if task.kind == "generate_batch":
             self._gen_occupancy.append(float(b["occupancy"]))
+            if "len_occupancy" in b:
+                self._gen_len_occupancy.append(float(b["len_occupancy"]))
         elif task.kind == "predict_batch":
             self._occupancy.append(float(b["occupancy"]))
+            if "len_occupancy" in b:
+                self._len_occupancy.append(float(b["len_occupancy"]))
 
     def _handle(self, task: Task):
         self._record_occupancy(task)
@@ -368,6 +377,10 @@ class Coordinator:
             "gen_batch_occupancy": (float(np.mean(self._gen_occupancy))
                                     if self._gen_occupancy else None),
             "n_generate_batches": len(self._gen_occupancy),
+            "len_occupancy": (float(np.mean(self._len_occupancy))
+                              if self._len_occupancy else None),
+            "gen_len_occupancy": (float(np.mean(self._gen_len_occupancy))
+                                  if self._gen_len_occupancy else None),
             "allocator_shapes": self.executor.allocator.shape_stats(),
             "quality_by_version": self._quality_by_version(pls),
             "evolution": (None if self.trainer is None else

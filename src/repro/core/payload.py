@@ -25,6 +25,20 @@ Both batched kinds pad their batch dim up to a ``BATCH_BUCKETS`` size
 devices. Their coalesce rules (``*_coalesce_rule``) let the executor fuse
 compatible queued tasks from different pipelines into one device batch.
 
+Length-bucketed masked batching: payloads carrying per-row true lengths
+(``seq_lens`` for ``predict_batch``, ``row_lens`` for ``generate_batch``)
+take the *masked* path — rows of different sequence lengths are padded to
+a ``LENGTH_BUCKETS`` edge (or campaign-derived edges, see
+``ProteinPayload.length_buckets``) and scored/sampled in one dense device
+batch, with pad positions excluded from every metric
+(``foldscore_fwd_masked``) and per-row ``chain_splits`` traced so mixed
+receptor lengths share one executable. The masked coalesce keys fuse on
+``(bucket_len, ...)`` instead of exact ``(L, chain_split)``, so a
+mixed-receptor-length campaign batches densely instead of degenerating to
+per-length 1-row dispatches. Legacy payloads (no per-row lengths) keep the
+exact-length path bit-for-bit and never fuse with masked ones —
+homogeneous campaigns are byte-identical to the seed.
+
 Compiled executables are cached per (kind, device, shape) — the cache-miss
 path is the paper's "Exec setup" phase (Fig. 5) and is tracked in
 ``compile_log`` for the utilization benchmark.
@@ -45,12 +59,14 @@ from repro.learn.param_store import ParamStore
 from repro.models import protein as prot
 # Canonical bucketing lives in the runtime layer (the allocator sizes
 # sub-meshes off the same buckets); re-exported here for back-compat.
-from repro.runtime.allocator import BATCH_BUCKETS, bucket_rows  # noqa: F401
+from repro.runtime.allocator import (BATCH_BUCKETS, LENGTH_BUCKETS,  # noqa: F401
+                                     bucket_len, bucket_rows)
 
 compile_log: Dict[str, list] = {"generate": [], "predict": []}
 
 # One record per predict_batch device dispatch: real rows vs padded bucket
-# rows and device fan-out — the occupancy numbers behind report()/benchmarks.
+# rows, token fill (``len_occupancy`` = real tokens / padded tokens) and
+# device fan-out — the occupancy numbers behind report()/benchmarks.
 batch_log: List[dict] = []
 
 # Same, for generate_batch dispatches.
@@ -120,7 +136,7 @@ class ProteinPayload:
     retired versions evict their copies via the store's retire hook."""
 
     def __init__(self, key=None, gen_cfg=None, fold_cfg=None, length=48,
-                 reduced=False):
+                 reduced=False, length_buckets=None):
         from repro.configs.registry import get_config, get_reduced
         key = key if key is not None else jax.random.PRNGKey(0)
         kg, kf = jax.random.split(key)
@@ -131,6 +147,11 @@ class ProteinPayload:
         self.param_store.on_retire(self._drop_gen_versions)
         self.fold_params = prot.init_foldscore(kf, self.fold_cfg)
         self.length = length
+        # token-dim bucket edges for masked payloads; None = the global
+        # LENGTH_BUCKETS table (campaigns pass denser histogram-derived
+        # edges via register_all)
+        self.length_buckets = (tuple(length_buckets)
+                               if length_buckets else None)
         self._cache: Dict[Tuple, callable] = {}
         self._cache_lock = threading.Lock()
         self._retired_versions: set = set()
@@ -248,7 +269,16 @@ class ProteinPayload:
         split evenly across the sub-mesh's devices, so large batches run as
         wide as the allocation allows instead of pinning to one device.
 
-        Returns {"rows": [per-row metric dicts], "batch": occupancy info}.
+        Masked mixed-length form: with per-row ``seq_lens`` (and optional
+        per-row ``chain_splits``, defaulting to ``receptor_len``), the
+        token dim is padded up to a ``length_buckets`` edge and the stack
+        is scored by ``foldscore_fwd_masked`` — pad positions are excluded
+        from every metric, and per-row chain splits are traced, so rows of
+        different receptor lengths share one dense executable. The jit
+        cache stays bounded at |row buckets| × |length buckets|.
+
+        Returns {"rows": [per-row metric dicts], "batch": occupancy info
+        incl. ``len_occupancy`` = real tokens / padded tokens}.
         """
         seqs = np.asarray(payload["sequences"], np.int32)
         if seqs.ndim == 1:
@@ -257,25 +287,55 @@ class ProteinPayload:
         tgt = np.asarray(payload["target"], np.float32)
         if tgt.ndim == 1:
             tgt = np.tile(tgt[None], (R, 1))
-        split = int(payload["receptor_len"])
-        (seqs, tgt), B = _pad_rows([seqs, tgt], R)
+        seq_lens = payload.get("seq_lens")
+        masked = seq_lens is not None
+        if masked:
+            seq_lens = np.asarray(seq_lens, np.int32).reshape(-1)
+            splits = np.asarray(
+                payload.get("chain_splits",
+                            np.full(R, int(payload["receptor_len"]))),
+                np.int32).reshape(-1)
+            Lb = bucket_len(L, self.length_buckets)
+            if Lb > L:
+                seqs = np.concatenate(
+                    [seqs, np.zeros((R, Lb - L), np.int32)], axis=1)
+                L = Lb
+            len_occ = float(seq_lens.sum()) / float(R * L)
+            (seqs, tgt, seq_lens, splits), B = _pad_rows(
+                [seqs, tgt, seq_lens, splits], R)
+        else:
+            split = int(payload["receptor_len"])
+            len_occ = 1.0
+            (seqs, tgt), B = _pad_rows([seqs, tgt], R)
         devices, per = _split_devices(submesh, B)
         ndev = len(devices)
         futures = []
         for i, dev in enumerate(devices):
-            fn = self._compiled(
-                f"predict_b{per}_L{L}_{split}", dev,
-                lambda: jax.jit(partial(prot.foldscore_fwd, cfg=self.fold_cfg,
-                                        chain_split=split)))
+            sl = slice(i * per, (i + 1) * per)
             fp = self._params_on("fold", self.fold_params, dev)
-            s = jax.device_put(seqs[i * per:(i + 1) * per], dev)
-            t = jax.device_put(tgt[i * per:(i + 1) * per], dev)
-            futures.append(fn(fp, s, t))
+            s = jax.device_put(seqs[sl], dev)
+            t = jax.device_put(tgt[sl], dev)
+            if masked:
+                fn = self._compiled(
+                    f"predict_mb{per}_L{L}", dev,
+                    lambda: jax.jit(partial(prot.foldscore_fwd_masked,
+                                            cfg=self.fold_cfg)))
+                futures.append(fn(fp, s, t,
+                                  jax.device_put(seq_lens[sl], dev),
+                                  jax.device_put(splits[sl], dev)))
+            else:
+                fn = self._compiled(
+                    f"predict_b{per}_L{L}_{split}", dev,
+                    lambda: jax.jit(partial(prot.foldscore_fwd,
+                                            cfg=self.fold_cfg,
+                                            chain_split=split)))
+                futures.append(fn(fp, s, t))
         m = prot.FoldMetrics(
             plddt=np.concatenate([np.asarray(f.plddt) for f in futures]),
             ptm=np.concatenate([np.asarray(f.ptm) for f in futures]),
             pae=np.concatenate([np.asarray(f.pae) for f in futures]))
-        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev}
+        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev,
+                 "len_occupancy": len_occ}
         batch_log.append(batch)
         return {"rows": prot.metrics_rows(m, R), "batch": dict(batch)}
 
@@ -293,6 +353,25 @@ class ProteinPayload:
 
         return jax.jit(jax.vmap(row, in_axes=(None, 0, 0)))
 
+    def _gen_batch_builder_masked(self, n, length, temp):
+        """Masked variant: every row samples at the shared bucketed
+        ``length``; a per-row ``row_len`` (traced) masks the log-likelihood
+        to the row's true length, and the host truncates the returned
+        tokens. A row's stream depends only on (seed, bucket) — never on
+        which other rows share the batch — so mixed-length fusion stays
+        deterministic per pipeline."""
+        cfg = self.gen_cfg
+
+        def row(params, bb, key, row_len):
+            s, tok_lps = prot.progen_sample(
+                params, bb[None], n=n, length=length, cfg=cfg, key=key,
+                temperature=temp, return_token_lps=True)
+            valid = (jnp.arange(length)[None, :]
+                     < row_len).astype(tok_lps.dtype)
+            return s[0], (tok_lps[0] * valid).sum(-1)
+
+        return jax.jit(jax.vmap(row, in_axes=(None, 0, 0, 0)))
+
     def generate_batch(self, submesh, payload):
         """Sample a (rows, n, L) candidate stack in one jitted call per
         device — one row per pipeline.
@@ -304,9 +383,15 @@ class ProteinPayload:
         perturb real rows — every row samples from its own key) and the
         padded stack splits evenly across the sub-mesh's devices.
 
+        Masked mixed-length form: with per-row ``row_lens``, ``length`` is
+        the shared bucketed sample length — every row samples at the bucket
+        (per-row keys keep streams batch-composition-independent), the
+        log-likelihood is masked to the row's true length on device, and
+        the returned tokens are truncated per row host-side.
+
         Returns {"rows": [(seqs (n,L) i32, lls (n,) f32) per row],
-        "batch": occupancy info, "gen_version": generator version the
-        dispatch sampled from}.
+        "batch": occupancy info (incl. ``len_occupancy``), "gen_version":
+        generator version the dispatch sampled from}.
         """
         bbs = np.asarray(payload["backbones"], np.float32)
         if bbs.ndim == 2:
@@ -315,7 +400,15 @@ class ProteinPayload:
         n, length = int(payload["n"]), int(payload["length"])
         temp = float(payload.get("temperature", 1.0))
         seeds = np.asarray(payload["seeds"], np.int64).reshape(-1)
-        (bbs, seeds), B = _pad_rows([bbs, seeds], R)
+        row_lens = payload.get("row_lens")
+        masked = row_lens is not None
+        if masked:
+            row_lens = np.asarray(row_lens, np.int32).reshape(-1)
+            len_occ = float(row_lens.sum()) / float(R * length)
+            (bbs, seeds, row_lens), B = _pad_rows([bbs, seeds, row_lens], R)
+        else:
+            len_occ = 1.0
+            (bbs, seeds), B = _pad_rows([bbs, seeds], R)
         # per-row threefry keys packed host-side ((hi, lo) uint32 words, the
         # layout jax.random.PRNGKey produces) — one vectorized construction
         # instead of B eager device calls
@@ -329,60 +422,92 @@ class ProteinPayload:
         ndev = len(devices)
         futures = []
         for i, dev in enumerate(devices):
-            fn = self._compiled(
-                f"generate_b{per}_n{n}_L{length}_t{temp}", dev,
-                lambda: self._gen_batch_builder(n, length, temp))
+            sl = slice(i * per, (i + 1) * per)
             gp = self._params_on(("gen", ver), gparams, dev)
-            b = jax.device_put(bbs[i * per:(i + 1) * per], dev)
-            k = jax.device_put(keys[i * per:(i + 1) * per], dev)
-            futures.append(fn(gp, b, k))
+            b = jax.device_put(bbs[sl], dev)
+            k = jax.device_put(keys[sl], dev)
+            if masked:
+                fn = self._compiled(
+                    f"generate_mb{per}_n{n}_L{length}_t{temp}", dev,
+                    lambda: self._gen_batch_builder_masked(n, length, temp))
+                futures.append(fn(gp, b, k,
+                                  jax.device_put(row_lens[sl], dev)))
+            else:
+                fn = self._compiled(
+                    f"generate_b{per}_n{n}_L{length}_t{temp}", dev,
+                    lambda: self._gen_batch_builder(n, length, temp))
+                futures.append(fn(gp, b, k))
         seqs = np.concatenate([np.asarray(f[0]) for f in futures])[:R]
         lls = np.concatenate([np.asarray(f[1]) for f in futures])[:R]
-        rows = [(seqs[r].astype(np.int32), lls[r].astype(np.float32))
-                for r in range(R)]
-        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev}
+        rows = [(seqs[r][:, :row_lens[r]].astype(np.int32) if masked
+                 else seqs[r].astype(np.int32),
+                 lls[r].astype(np.float32)) for r in range(R)]
+        batch = {"rows": R, "bucket": B, "occupancy": R / B, "devices": ndev,
+                 "len_occupancy": len_occ}
         gen_batch_log.append(batch)
         return {"rows": rows, "batch": dict(batch), "gen_version": ver}
 
     def register_all(self, executor, generate_batch_rows: int = None,
-                     coalesce: bool = True):
+                     coalesce: bool = True, length_buckets=None):
         """Register every task fn (and, when the executor supports it, the
         batched kinds' coalesce rules). ``generate_batch_rows`` bounds the
         fused generate batch — pass ``ProtocolConfig.generate_batch_size``
         so the config's 'up to this many rows per device batch' contract
         holds; None keeps the BATCH_BUCKETS cap. ``coalesce=False`` skips
-        the coalesce rules (benchmark baselines register their own)."""
+        the coalesce rules (benchmark baselines register their own).
+        ``length_buckets`` installs campaign-derived token-dim bucket edges
+        (masked payload padding + masked coalesce keys); None keeps the
+        payload's current table (global ``LENGTH_BUCKETS`` by default)."""
+        if length_buckets is not None:
+            self.length_buckets = tuple(length_buckets)
         executor.register("generate", self.generate)
         executor.register("generate_batch", self.generate_batch)
         executor.register("predict", self.predict)
         executor.register("predict_batch", self.predict_batch)
         if coalesce and hasattr(executor, "register_coalescable"):
-            executor.register_coalescable("predict_batch",
-                                          predict_batch_coalesce_rule())
+            executor.register_coalescable(
+                "predict_batch",
+                predict_batch_coalesce_rule(
+                    length_buckets=self.length_buckets))
             executor.register_coalescable(
                 "generate_batch",
                 generate_batch_coalesce_rule(
                     max_rows=(generate_batch_rows if generate_batch_rows
-                              else BATCH_BUCKETS[-1])))
+                              else BATCH_BUCKETS[-1]),
+                    prefix_len=self.gen_cfg.frontend_seq))
 
 
-def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
-    """Coalescing contract for ``predict_batch`` tasks: queued tasks from
-    *different* pipelines with the same (sequence length, chain split) fuse
-    into one device batch — per-row targets keep each pipeline's context —
-    and results fan back out row-slice by row-slice."""
+def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
+                                length_buckets=None):
+    """Coalescing contract for ``predict_batch`` tasks.
+
+    Legacy payloads (no ``seq_lens``) fuse on the exact (sequence length,
+    chain split) — bit-for-bit the seed behavior. Masked payloads fuse on
+    the *length bucket* alone: tasks of different sequence lengths and
+    different receptor splits merge into one dense padded batch (per-row
+    ``seq_lens``/``chain_splits`` threaded through), which is what keeps a
+    mixed-receptor-length campaign from degenerating to 1-row dispatches.
+    The two families never fuse with each other, so adding masked tasks to
+    a campaign cannot perturb legacy results."""
     from repro.runtime.executor import CoalesceRule
 
     def n_rows(task):
         s = np.asarray(task.payload["sequences"])
         return 1 if s.ndim == 1 else int(s.shape[0])
 
+    def width(task):
+        return int(np.asarray(task.payload["sequences"]).shape[-1])
+
     def key(task):
-        s = np.asarray(task.payload["sequences"])
-        return (int(s.shape[-1]), int(task.payload["receptor_len"]))
+        if "seq_lens" in task.payload:
+            return ("masked", bucket_len(width(task), length_buckets))
+        return (width(task), int(task.payload["receptor_len"]))
 
     def merge(tasks):
-        seq_stacks, tgt_stacks = [], []
+        masked = "seq_lens" in tasks[0].payload
+        Lb = (bucket_len(max(width(t) for t in tasks), length_buckets)
+              if masked else None)
+        seq_stacks, tgt_stacks, lens, splits = [], [], [], []
         for t in tasks:
             s = np.asarray(t.payload["sequences"], np.int32)
             if s.ndim == 1:
@@ -390,11 +515,27 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
             g = np.asarray(t.payload["target"], np.float32)
             if g.ndim == 1:
                 g = np.tile(g[None], (s.shape[0], 1))
+            if masked:
+                if Lb > s.shape[1]:   # pad member stacks to the bucket
+                    s = np.concatenate(
+                        [s, np.zeros((s.shape[0], Lb - s.shape[1]),
+                                     np.int32)], axis=1)
+                lens.append(np.asarray(t.payload["seq_lens"],
+                                       np.int32).reshape(-1))
+                splits.append(np.asarray(
+                    t.payload.get("chain_splits",
+                                  np.full(s.shape[0],
+                                          int(t.payload["receptor_len"]))),
+                    np.int32).reshape(-1))
             seq_stacks.append(s)
             tgt_stacks.append(g)
-        return {"sequences": np.concatenate(seq_stacks),
-                "target": np.concatenate(tgt_stacks),
-                "receptor_len": tasks[0].payload["receptor_len"]}
+        fused = {"sequences": np.concatenate(seq_stacks),
+                 "target": np.concatenate(tgt_stacks),
+                 "receptor_len": tasks[0].payload["receptor_len"]}
+        if masked:
+            fused["seq_lens"] = np.concatenate(lens)
+            fused["chain_splits"] = np.concatenate(splits)
+        return fused
 
     def split(tasks, result):
         return _fan_out_rows(tasks, result, n_rows)
@@ -404,13 +545,20 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1]):
 
 
 def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
-                                 admission_window: float = 0.005):
+                                 admission_window: float = 0.005,
+                                 prefix_len: int = None):
     """Coalescing contract for ``generate_batch`` tasks: one-row tasks from
     *different* pipelines with the same (n, length, backbone prefix shape,
     temperature) stack into one device batch; per-row seeds keep each
     pipeline's sampling stream. The default ``admission_window`` enables
     rolling admission — compatible tasks queued while a batch is being
-    assembled join it instead of waiting a full cycle."""
+    assembled join it instead of waiting a full cycle.
+
+    Masked payloads (per-row ``row_lens``, ``length`` already bucketed by
+    the protocol) additionally fuse across *backbone lengths*: backbones
+    are compared and merged on their ``prefix_len`` prefix (all the model
+    consumes), so pipelines for different-size receptors share one device
+    batch. Masked and legacy tasks never fuse with each other."""
     from repro.runtime.executor import CoalesceRule
 
     def bbs(task):
@@ -422,17 +570,32 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
 
     def key(task):
         p = task.payload
-        return (int(p["n"]), int(p["length"]), bbs(task).shape[1:],
+        shape = bbs(task).shape[1:]
+        if "row_lens" in p:
+            if prefix_len:
+                shape = (min(shape[0], prefix_len),) + shape[1:]
+            return ("masked", int(p["n"]), int(p["length"]), shape,
+                    float(p.get("temperature", 1.0)))
+        return (int(p["n"]), int(p["length"]), shape,
                 float(p.get("temperature", 1.0)))
 
     def merge(tasks):
-        return {"backbones": np.concatenate([bbs(t) for t in tasks]),
-                "seeds": np.concatenate(
-                    [np.asarray(t.payload["seeds"], np.int64).reshape(-1)
-                     for t in tasks]),
-                "n": tasks[0].payload["n"],
-                "length": tasks[0].payload["length"],
-                "temperature": tasks[0].payload.get("temperature", 1.0)}
+        masked = "row_lens" in tasks[0].payload
+        stacks = [bbs(t) for t in tasks]
+        if masked and prefix_len:
+            stacks = [b[:, :prefix_len] for b in stacks]
+        fused = {"backbones": np.concatenate(stacks),
+                 "seeds": np.concatenate(
+                     [np.asarray(t.payload["seeds"], np.int64).reshape(-1)
+                      for t in tasks]),
+                 "n": tasks[0].payload["n"],
+                 "length": tasks[0].payload["length"],
+                 "temperature": tasks[0].payload.get("temperature", 1.0)}
+        if masked:
+            fused["row_lens"] = np.concatenate(
+                [np.asarray(t.payload["row_lens"], np.int32).reshape(-1)
+                 for t in tasks])
+        return fused
 
     def split(tasks, result):
         return _fan_out_rows(tasks, result, n_rows)
@@ -489,8 +652,12 @@ class FinetunePayload:
             cfg = self.pp.gen_cfg
 
             def loss_fn(params, batch):
+                # optional per-row lengths mask a mixed-length design batch
+                # (rows padded to a common width) — absent for the
+                # homogeneous batches ReplayBuffer.sample produces today
                 lp = prot.progen_logprobs(params, batch["backbones"],
-                                          batch["sequences"], cfg)   # (B,)
+                                          batch["sequences"], cfg,
+                                          seq_lens=batch.get("seq_lens"))
                 w = batch["weights"]
                 wn = w / jnp.maximum(w.sum(), 1e-6)
                 loss = -(wn * lp).sum()
@@ -546,6 +713,11 @@ class FinetunePayload:
         batch = {"backbones": jax.device_put(bbs, rows),
                  "sequences": jax.device_put(seqs, rows),
                  "weights": jax.device_put(w, rows)}
+        if payload.get("seq_lens") is not None:
+            sl = np.asarray(payload["seq_lens"], np.int32).reshape(-1)
+            if pad:
+                sl = np.concatenate([sl, np.repeat(sl[-1:], pad)])
+            batch["seq_lens"] = jax.device_put(sl, rows)
         step = self._train_step()
         preempted = False
         k = start

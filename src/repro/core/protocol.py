@@ -44,12 +44,13 @@ sub-mesh proportional to the fused batch instead of the fixed
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.api import Decision, DesignProtocol, revive_design_meta
 from repro.core.pipeline import Pipeline, ResourceRequest, Task
+from repro.runtime.allocator import bucket_len
 
 AA = 20
 
@@ -73,6 +74,16 @@ class ProtocolConfig:
     generate_batch_size: int = 0  # 0: one generate task per pipeline cycle
     #   (seed path); >=1: coalescable one-row generate_batch tasks that
     #   fuse across pipelines up to this many rows per device batch
+    length_buckets: Optional[Tuple[int, ...]] = None
+    #   None (default): exact-length tasks — the seed path, bit-for-bit.
+    #   A tuple of bucket edges (a mixed-receptor-length campaign; see
+    #   repro.session.campaign_length_buckets) switches the batched task
+    #   builders to the *masked* payload forms: generate_batch samples at
+    #   the bucketed length with a per-row true length, predict_batch
+    #   carries per-row seq_lens/chain_splits — so pipelines of different
+    #   receptor lengths fuse into one dense device batch. Deterministic
+    #   per pipeline: the bucket decision is made here, at task-creation
+    #   time, never by what else happens to be queued.
 
 
 def fitness(metrics: Dict[str, float]) -> float:
@@ -172,13 +183,22 @@ class ImpressProtocol(DesignProtocol):
         c = self.cfg
         seed = c.seed + 1000 * pl.uid + pl.cycle
         if c.generate_batch_size >= 1 and c.adaptive:
-            return Task(kind="generate_batch", pipeline_id=pl.uid, payload={
+            L = int(pl.meta["receptor_len"])
+            payload = {
                 "backbones": pl.meta["backbone"][None],
                 "seeds": [seed],
                 "n": c.n_candidates,
-                "length": pl.meta["receptor_len"],
+                "length": L,
                 "temperature": c.temperature,
-            }, resources=ResourceRequest(n_devices=1, rows=1))
+            }
+            if c.length_buckets:
+                # masked form: sample at the bucket edge, truncate to the
+                # true length — so different-length pipelines share a key
+                payload["length"] = bucket_len(L, c.length_buckets)
+                payload["row_lens"] = [L]
+            return Task(kind="generate_batch", pipeline_id=pl.uid,
+                        payload=payload,
+                        resources=ResourceRequest(n_devices=1, rows=1))
         return Task(kind="generate", pipeline_id=pl.uid, payload={
             "backbone": pl.meta["backbone"],
             "n": c.n_candidates,
@@ -220,12 +240,22 @@ class ImpressProtocol(DesignProtocol):
         pep = pl.meta["peptide_tokens"]
         stack = np.stack([np.concatenate(
             [np.asarray(seqs[i + r], np.int32), pep]) for r in range(k)])
-        return Task(kind="predict_batch", pipeline_id=pl.uid, payload={
+        payload = {
             "sequences": stack,
             "target": pl.meta["target"],
             "receptor_len": pl.meta["receptor_len"],
-        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices,
-                                     rows=k))
+        }
+        if self.cfg.length_buckets:
+            # masked form: per-row true lengths/splits ride along so the
+            # payload pads to the length bucket and fuses across pipelines
+            # of different receptor lengths
+            payload["seq_lens"] = np.full(k, stack.shape[1], np.int32)
+            payload["chain_splits"] = np.full(
+                k, int(pl.meta["receptor_len"]), np.int32)
+        return Task(kind="predict_batch", pipeline_id=pl.uid,
+                    payload=payload,
+                    resources=ResourceRequest(
+                        n_devices=self.cfg.predict_devices, rows=k))
 
     def _next_predict_task(self, pl: Pipeline) -> Task:
         return (self._predict_batch_task(pl) if self.cfg.score_batch >= 1

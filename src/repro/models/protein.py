@@ -35,13 +35,15 @@ class FoldMetrics(NamedTuple):
 def metrics_rows(m: FoldMetrics, n: int | None = None) -> list:
     """Materialize batched FoldMetrics as one host-side dict per row (the
     per-candidate contract of the protocol layer). ``n`` truncates padded
-    bucket rows."""
-    plddt = np.asarray(m.plddt, np.float32)
-    ptm = np.asarray(m.ptm, np.float32)
-    pae = np.asarray(m.pae, np.float32)
-    n = plddt.shape[0] if n is None else n
-    return [{"plddt": float(plddt[i]), "ptm": float(ptm[i]),
-             "pae": float(pae[i])} for i in range(n)]
+    bucket rows. One ``.tolist()`` per metric instead of 3×N scalar
+    ``float(arr[i])`` reads — the indexing form is measurable host-side
+    overhead at bucket 64."""
+    plddt = np.asarray(m.plddt, np.float32).tolist()
+    ptm = np.asarray(m.ptm, np.float32).tolist()
+    pae = np.asarray(m.pae, np.float32).tolist()
+    n = len(plddt) if n is None else n
+    return [{"plddt": pl, "ptm": pt, "pae": pa}
+            for pl, pt, pa in zip(plddt[:n], ptm[:n], pae[:n])]
 
 
 # ---------------------------------------------------------------------------
@@ -65,8 +67,14 @@ def encode_structure(params, backbone, cfg):
                           jnp.dtype(cfg.compute_dtype))
 
 
-def progen_logprobs(params, backbone, seqs, cfg):
-    """Log-likelihood of sequences (B, L) given structure (B, P, 16)."""
+def progen_logprobs(params, backbone, seqs, cfg, seq_lens=None):
+    """Log-likelihood of sequences (B, L) given structure (B, P, 16).
+
+    ``seq_lens`` (B,) i32 masks per-row padding: positions >= a row's true
+    length contribute nothing to its sum. The decoder is causal, so a
+    padded row's valid-position log-probs are identical to scoring the row
+    alone at its true length — masking makes mixed-length rows safe to fuse
+    into one dense batch. None keeps the seed full-width sum."""
     patches = encode_structure(params, backbone, cfg)
     inputs = jnp.concatenate(
         [jnp.zeros((seqs.shape[0], 1), seqs.dtype), seqs[:, :-1]], axis=1)
@@ -74,12 +82,21 @@ def progen_logprobs(params, backbone, seqs, cfg):
         params, {"inputs": inputs, "targets": seqs, "patches": patches}, cfg)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     tok_lp = jnp.take_along_axis(logp, seqs[..., None], axis=-1)[..., 0]
-    return tok_lp.sum(-1)
+    if seq_lens is None:
+        return tok_lp.sum(-1)
+    valid = (jnp.arange(seqs.shape[1])[None, :]
+             < seq_lens[:, None]).astype(tok_lp.dtype)
+    return (tok_lp * valid).sum(-1)
 
 
-def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0):
+def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0,
+                  return_token_lps=False):
     """Sample n sequences per structure. backbone (B,P,16).
-    Returns (seqs (B,n,L) i32, loglik (B,n))."""
+    Returns (seqs (B,n,L) i32, loglik (B,n)) — or, with
+    ``return_token_lps``, (seqs, per-token log-probs (B,n,L)) so callers
+    can re-aggregate likelihoods under a per-row length mask (the
+    length-bucketed sampling path). The sampled tokens are identical either
+    way; the legacy summed loglik is untouched."""
     B = backbone.shape[0]
     bb = jnp.repeat(backbone, n, axis=0)                       # (B*n,P,16)
     patches = encode_structure(params, bb, cfg)
@@ -93,7 +110,7 @@ def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0):
         nxt = jax.random.categorical(k, logits / temperature, axis=-1)
         step_lp = jnp.take_along_axis(
             jax.nn.log_softmax(logits, -1), nxt[:, None], -1)[:, 0]
-        return (caches, nxt[:, None], t + 1, lp + step_lp), nxt
+        return (caches, nxt[:, None], t + 1, lp + step_lp), (nxt, step_lp)
 
     bos = jnp.zeros((B * n, 1), jnp.int32)
     logits, caches, t0 = lm_mod.prefill(
@@ -104,9 +121,12 @@ def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0):
     lp0 = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                               first[:, None], -1)[:, 0]
     keys = jax.random.split(key, length - 1)
-    (caches, _, _, lp), toks = jax.lax.scan(
+    (caches, _, _, lp), (toks, step_lps) = jax.lax.scan(
         step, (caches, first[:, None], t0, lp0), keys)
     seqs = jnp.concatenate([first[None], toks], axis=0).T       # (B*n, L)
+    if return_token_lps:
+        tok_lps = jnp.concatenate([lp0[None], step_lps], axis=0).T  # (B*n,L)
+        return seqs.reshape(B, n, length), tok_lps.reshape(B, n, length)
     return seqs.reshape(B, n, length), lp.reshape(B, n)
 
 
@@ -129,10 +149,12 @@ def init_foldscore(key, cfg):
     return params
 
 
-def foldscore_fwd(params, seqs, target, cfg, chain_split: int):
-    """seqs (B,L) i32 complex sequence; target (B,16) target descriptor;
-    chain_split = index separating receptor from peptide chain.
-    Returns FoldMetrics."""
+def _foldscore_trunk(params, seqs, target, cfg):
+    """Shared trunk: embedded complex + target descriptor through the
+    transformer stack. Returns final hidden states (B, L, d) in fp32. The
+    stack is causal (dense-family ``attn`` layers), so appending pad tokens
+    to a row leaves the hidden states at its real positions bit-identical —
+    the property the masked scorer relies on."""
     from repro.models.common import embed_tokens, norm_fwd as _norm
     from repro.models import blocks as blk
     x = embed_tokens(params["embedding"], seqs, cfg)
@@ -141,17 +163,61 @@ def foldscore_fwd(params, seqs, target, cfg, chain_split: int):
     ctx = {"positions": jnp.arange(seqs.shape[1]), "enc_out": None}
     for seg, (kinds, _) in zip(params["segments"], cfg.segments):
         x, _ = blk.segment_fwd(seg, x, kinds, ctx, cfg)
-    x = _norm(params["final_norm"], x, cfg).astype(jnp.float32)
+    return _norm(params["final_norm"], x, cfg).astype(jnp.float32)
+
+
+def _pae_logits(params, x):
+    """Full inter-residue pAE matrix (B, L, L) from trunk states."""
+    h = params["heads"]
+    zl = jnp.einsum("bld,dk->blk", x, h["pae_l"])
+    zr = jnp.einsum("bld,dk->blk", x, h["pae_r"])
+    return 30.0 * jax.nn.sigmoid(
+        jnp.einsum("bik,bjk->bij", zl, zr) / np.sqrt(32.0))
+
+
+def foldscore_fwd(params, seqs, target, cfg, chain_split: int):
+    """seqs (B,L) i32 complex sequence; target (B,16) target descriptor;
+    chain_split = index separating receptor from peptide chain.
+    Returns FoldMetrics."""
+    x = _foldscore_trunk(params, seqs, target, cfg)
     h = params["heads"]
     plddt_res = 100.0 * jax.nn.sigmoid(
         jnp.einsum("bld,d->bl", x, h["plddt"][:, 0]))           # (B,L)
     plddt = plddt_res.mean(-1)
     ptm = jax.nn.sigmoid(jnp.einsum("bld,d->bl", x, h["ptm"][:, 0]).mean(-1))
-    zl = jnp.einsum("bld,dk->blk", x, h["pae_l"])
-    zr = jnp.einsum("bld,dk->blk", x, h["pae_r"])
-    pae_full = 30.0 * jax.nn.sigmoid(
-        jnp.einsum("bik,bjk->bij", zl, zr) / np.sqrt(32.0))     # (B,L,L)
+    pae_full = _pae_logits(params, x)                           # (B,L,L)
     inter = pae_full[:, :chain_split, chain_split:]
     pae = 0.5 * (inter.mean((-2, -1))
                  + pae_full[:, chain_split:, :chain_split].mean((-2, -1)))
     return FoldMetrics(plddt=plddt, ptm=ptm, pae=pae)
+
+
+def foldscore_fwd_masked(params, seqs, target, seq_lens, chain_splits, cfg):
+    """Masked scorer for dense mixed-length batches.
+
+    seqs (B, Lpad) i32, rows padded past their true length; seq_lens (B,)
+    i32 per-row complex length; chain_splits (B,) i32 per-row receptor
+    length (traced, so mixed receptor lengths share ONE executable —
+    unlike ``foldscore_fwd``'s static ``chain_split``). Pad positions are
+    excluded from the pLDDT/pTM means and from both inter-chain pAE means,
+    so a padded row's metrics match scoring it alone at its true length
+    (the trunk is causal; see ``_foldscore_trunk``). Returns FoldMetrics.
+    """
+    x = _foldscore_trunk(params, seqs, target, cfg)
+    h = params["heads"]
+    pos = jnp.arange(seqs.shape[1])[None, :]                    # (1, L)
+    valid = (pos < seq_lens[:, None]).astype(jnp.float32)       # (B, L)
+    n_valid = jnp.maximum(valid.sum(-1), 1.0)
+    plddt_res = 100.0 * jax.nn.sigmoid(
+        jnp.einsum("bld,d->bl", x, h["plddt"][:, 0]))
+    plddt = (plddt_res * valid).sum(-1) / n_valid
+    ptm = jax.nn.sigmoid(
+        (jnp.einsum("bld,d->bl", x, h["ptm"][:, 0]) * valid).sum(-1)
+        / n_valid)
+    pae_full = _pae_logits(params, x)                           # (B,L,L)
+    receptor = (pos < chain_splits[:, None]).astype(jnp.float32)
+    peptide = valid * (1.0 - receptor)
+    den = jnp.maximum(receptor.sum(-1) * peptide.sum(-1), 1.0)
+    rp = jnp.einsum("bij,bi,bj->b", pae_full, receptor, peptide) / den
+    pr = jnp.einsum("bij,bi,bj->b", pae_full, peptide, receptor) / den
+    return FoldMetrics(plddt=plddt, ptm=ptm, pae=0.5 * (rp + pr))

@@ -47,6 +47,48 @@ def bucket_rows(n: int) -> int:
     return b
 
 
+# Sequence-length buckets masked batched payloads pad their token dim to,
+# the second axis of the jit-cache bound: every masked (rows, length) lands
+# on one of len(BATCH_BUCKETS) × len(LENGTH_BUCKETS) compiled executables.
+# Campaigns with a known length histogram should derive denser edges via
+# ``choose_length_buckets`` (padding a 0.75-filled bucket wastes real
+# speedup — see ROADMAP's PR 2 note); this table is the fallback for
+# arbitrary lengths (worst-case per-row fill ~2/3).
+LENGTH_BUCKETS = (8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
+
+
+def bucket_len(L: int, buckets=None) -> int:
+    """Smallest length bucket >= L — from ``buckets`` (campaign-derived
+    edges) or the global ``LENGTH_BUCKETS`` table; past the largest edge,
+    rounds up to the next multiple of it (still bounded)."""
+    bs = LENGTH_BUCKETS if buckets is None else tuple(buckets)
+    L = max(1, int(L))
+    for b in bs:
+        if L <= b:
+            return int(b)
+    top = int(bs[-1])
+    return -(-L // top) * top
+
+
+def choose_length_buckets(lengths, max_pad: float = 0.125):
+    """Dense bucket edges from a campaign's length histogram.
+
+    Greedy from the longest length down: each edge is a length seen in the
+    campaign, and every length within ``max_pad`` relative padding of an
+    edge shares its bucket. Guarantees per-row token fill >= 1 - max_pad on
+    the histogram it was built from while keeping the edge set (and with it
+    the jit cache) minimal. Returns a sorted tuple, or None for an empty
+    histogram."""
+    uniq = sorted({int(v) for v in lengths}, reverse=True)
+    if not uniq:
+        return None
+    edges = []
+    for L in uniq:
+        if not edges or L < (1.0 - max_pad) * edges[-1]:
+            edges.append(L)
+    return tuple(sorted(edges))
+
+
 @dataclass
 class SubMesh:
     devices: np.ndarray              # nd array of jax devices

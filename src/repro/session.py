@@ -32,9 +32,10 @@ shim), but new code should build campaigns through this module.
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import asdict, dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core import (Coordinator, DesignProtocol, ImpressProtocol,
                         MultiObjectiveConfig, MultiObjectiveProtocol,
@@ -43,6 +44,7 @@ from repro.core.payload import FinetunePayload
 from repro.data import protein_design_tasks
 from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService
 from repro.runtime import AsyncExecutor, DeviceAllocator
+from repro.runtime.allocator import choose_length_buckets
 
 SCHEMA_VERSION = 1   # CampaignReport / checkpoint schema
 
@@ -71,11 +73,25 @@ class ProtocolSpec:
 @dataclass(frozen=True)
 class CampaignSpec:
     """Everything a campaign needs, declaratively: the starting structures,
-    the protocol mix, batching/evolution switches, and the device budget."""
+    the protocol mix, batching/evolution switches, and the device budget.
+
+    ``receptor_len`` may be a tuple — one length per starting structure,
+    cycled — which is the paper's realistic mixed-length campaign: every
+    designable protein has a different length. A mixed campaign derives
+    dense length-bucket edges from its own length histogram
+    (``campaign_length_buckets``) and switches the batched task builders to
+    the masked payload forms so different-length pipelines still fuse into
+    dense device batches; a single int keeps the seed exact-length paths
+    bit-for-bit."""
     structures: int = 2
-    receptor_len: int = 24
+    receptor_len: Union[int, Tuple[int, ...]] = 24
     peptide_len: int = 6
     protocols: Tuple = (ProtocolSpec(),)   # ProtocolSpec entries or kind strs
+    # -- length bucketing (mixed-length campaigns) --
+    length_buckets: Optional[Tuple[int, ...]] = None   # explicit edges;
+    #   None = derive from the campaign's length histogram when mixed
+    length_bucket_max_pad: float = 0.125   # max per-row padding fraction
+    #   accepted when deriving bucket edges (denser edges = fuller buckets)
     # -- model evolution (§V) --
     evolution: bool = False
     finetune_every: int = 2
@@ -94,6 +110,37 @@ class CampaignSpec:
     reduced: bool = True                   # reduced-scale payload models
     seed: int = 0
     timeout: float = 600.0
+    # XLA persistent compilation cache: repeat campaigns (and per-sub-mesh
+    # finetune recompiles) reuse compiled executables across processes
+    # instead of paying multi-second "Exec setup" on every run. None falls
+    # back to $IMPRESS_COMPILATION_CACHE; empty/unset disables.
+    compilation_cache_dir: Optional[str] = None
+
+
+# -- length bucketing -------------------------------------------------------
+
+
+def _receptor_lens(spec: CampaignSpec) -> List[int]:
+    rl = spec.receptor_len
+    if isinstance(rl, (tuple, list)):
+        return [int(v) for v in rl]
+    return [int(rl)]
+
+
+def campaign_length_buckets(spec: CampaignSpec
+                            ) -> Optional[Tuple[int, ...]]:
+    """Token-dim bucket edges for a campaign: the explicit
+    ``spec.length_buckets`` override, or edges chosen densely from the
+    campaign's own length histogram (receptor lengths + complex widths)
+    when receptor lengths are mixed. None for a homogeneous campaign —
+    which keeps every task on the exact-length seed path."""
+    if spec.length_buckets:
+        return tuple(int(b) for b in spec.length_buckets)
+    lens = _receptor_lens(spec)
+    if len(set(lens)) <= 1:
+        return None
+    hist = lens + [ln + int(spec.peptide_len) for ln in lens]
+    return choose_length_buckets(hist, max_pad=spec.length_bucket_max_pad)
 
 
 # -- protocol-kind registry (pluggable) ------------------------------------
@@ -120,6 +167,7 @@ def _impress_cfg(ps: ProtocolSpec, cs: CampaignSpec, *, adaptive: bool
         generate_batch_size=ps.generate_batch_size,
         gen_devices=ps.gen_devices, predict_devices=ps.predict_devices,
         temperature=ps.temperature,
+        length_buckets=campaign_length_buckets(cs),
         seed=cs.seed if ps.seed is None else ps.seed)
 
 
@@ -146,6 +194,23 @@ def _normalize_protocols(spec: CampaignSpec) -> List[ProtocolSpec]:
             p = ProtocolSpec(**p)
         out.append(p)
     return out
+
+
+def _enable_compilation_cache(jax, path: str):
+    """Point XLA's persistent compilation cache at ``path`` (created if
+    missing) and drop the size/compile-time floors so even reduced-scale
+    test executables are cached — repeat campaigns and the finetune
+    per-sub-mesh recompile then load compiled code from disk instead of
+    recompiling. Floor knobs vary across jax versions; missing ones are
+    skipped."""
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    for knob, val in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                      ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(knob, val)
+        except (AttributeError, ValueError):
+            pass
 
 
 # -- the report -------------------------------------------------------------
@@ -233,14 +298,21 @@ class ImpressSession:
 
     def _build(self, spec: CampaignSpec, payload, jax):
         t0 = time.monotonic()
+        self.compilation_cache_dir = (
+            spec.compilation_cache_dir
+            or os.environ.get("IMPRESS_COMPILATION_CACHE") or None)
+        if self.compilation_cache_dir:
+            _enable_compilation_cache(jax, self.compilation_cache_dir)
+        self.length_buckets = campaign_length_buckets(spec)
         self.payload = payload if payload is not None else ProteinPayload(
             jax.random.PRNGKey(spec.seed), reduced=spec.reduced,
-            length=spec.receptor_len)
+            length=max(_receptor_lens(spec)))
         gbs = max((ps.generate_batch_size for ps in self.protocol_specs),
                   default=0)
         self.payload.register_all(self.executor,
                                   generate_batch_rows=gbs or None,
-                                  coalesce=spec.coalesce)
+                                  coalesce=spec.coalesce,
+                                  length_buckets=self.length_buckets)
         self.bootstrap_s = time.monotonic() - t0   # payload + registry setup
         self.buffer = None
         self.trainer = None
@@ -315,6 +387,12 @@ class ImpressSession:
             self._populate()
         raw = self.coordinator.run(
             timeout=self.spec.timeout if timeout is None else timeout)
+        raw["compile"] = {
+            "persistent_cache_dir": self.compilation_cache_dir,
+            "mean_exec_setup_s": raw["executor"]["mean_exec_setup_s"],
+            "length_buckets": (list(self.length_buckets)
+                               if self.length_buckets else None),
+        }
         return CampaignReport.from_raw(raw)
 
     # -- checkpoint / restore ----------------------------------------------

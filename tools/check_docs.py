@@ -34,6 +34,7 @@ ARCH_SECTIONS = [
     "API layers",
     "Task flow",
     "Batching and coalescing",
+    "Length bucketing & masking",
     "Model evolution",
     "Adding a new task kind",
 ]
