@@ -56,6 +56,9 @@ def main() -> None:
     if "generate" in only:
         from benchmarks import bench_generate
         bench_generate.main(print, argv=["--json", "BENCH_generate.json"])
+        # paged continuous-decode sweep merges into the same record
+        bench_generate.main(print, argv=["--decode-kernel", "--json",
+                                         "BENCH_generate.json"])
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

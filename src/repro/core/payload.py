@@ -244,17 +244,40 @@ class ProteinPayload:
                 "lls": lls.astype(np.float32), "gen_version": ver}
 
     def predict(self, submesh, payload):
-        """Score one sequence. Returns {"plddt","ptm","pae"} floats."""
+        """Score one sequence. Returns {"plddt","ptm","pae"} floats.
+
+        With ``seq_len`` in the payload (the row's true length — set by
+        the protocol when length bucketing is active) the sequence is
+        padded to its ``length_buckets`` edge and scored by the masked
+        kernel under the compile key ``predict_mb1_L{bucket}`` — the same
+        executable family a 1-row masked ``predict_batch`` dispatch uses,
+        so solo scoring stops minting per-exact-length executables."""
         dev = submesh.devices.flat[0]
         seq = np.asarray(payload["sequence"], np.int32)[None]
         tgt = np.asarray(payload["target"], np.float32)[None]
         split = int(payload["receptor_len"])
-        fn = self._compiled(
-            f"predict{seq.shape[1]}_{split}", dev,
-            lambda: jax.jit(partial(prot.foldscore_fwd, cfg=self.fold_cfg,
-                                    chain_split=split)))
         fp = self._params_on("fold", self.fold_params, dev)
-        m = fn(fp, jax.device_put(seq, dev), jax.device_put(tgt, dev))
+        if payload.get("seq_len") is not None:
+            true_len = int(payload["seq_len"])
+            Lb = bucket_len(seq.shape[1], self.length_buckets)
+            if Lb > seq.shape[1]:
+                seq = np.concatenate(
+                    [seq, np.zeros((1, Lb - seq.shape[1]), np.int32)],
+                    axis=1)
+            fn = self._compiled(
+                f"predict_mb1_L{Lb}", dev,
+                lambda: jax.jit(partial(prot.foldscore_fwd_masked,
+                                        cfg=self.fold_cfg)))
+            m = fn(fp, jax.device_put(seq, dev), jax.device_put(tgt, dev),
+                   jax.device_put(np.asarray([true_len], np.int32), dev),
+                   jax.device_put(np.asarray([split], np.int32), dev))
+        else:
+            fn = self._compiled(
+                f"predict{seq.shape[1]}_{split}", dev,
+                lambda: jax.jit(partial(prot.foldscore_fwd,
+                                        cfg=self.fold_cfg,
+                                        chain_split=split)))
+            m = fn(fp, jax.device_put(seq, dev), jax.device_put(tgt, dev))
         return {"plddt": float(m.plddt[0]), "ptm": float(m.ptm[0]),
                 "pae": float(m.pae[0])}
 
@@ -392,7 +415,13 @@ class ProteinPayload:
         Returns {"rows": [(seqs (n,L) i32, lls (n,) f32) per row],
         "batch": occupancy info (incl. ``len_occupancy``), "gen_version":
         generator version the dispatch sampled from}.
+
+        Paged decode form (``payload["decode"] == "paged"``): routed to
+        ``_generate_batch_paged`` — token-by-token continuous batching
+        over a paged KV cache instead of per-row dense sampling.
         """
+        if payload.get("decode") == "paged":
+            return self._generate_batch_paged(submesh, payload)
         bbs = np.asarray(payload["backbones"], np.float32)
         if bbs.ndim == 2:
             bbs = bbs[None]
@@ -447,8 +476,101 @@ class ProteinPayload:
         gen_batch_log.append(batch)
         return {"rows": rows, "batch": dict(batch), "gen_version": ver}
 
+    def _paged_parse(self, payload, length):
+        """Normalize a paged generate payload's per-row arrays."""
+        bbs = np.asarray(payload["backbones"], np.float32)
+        if bbs.ndim == 2:
+            bbs = bbs[None]
+        bbs = bbs[:, :self.gen_cfg.frontend_seq]
+        seeds = np.asarray(payload["seeds"], np.int64).reshape(-1)
+        rl = payload.get("row_lens")
+        rl = (np.asarray(rl, np.int32).reshape(-1) if rl is not None
+              else np.full(bbs.shape[0], length, np.int32))
+        return bbs, seeds, rl
+
+    def _generate_batch_paged(self, submesh, payload):
+        """Continuously-batched sampling over a paged KV cache.
+
+        Every (row, candidate) pair becomes one decode slot in a
+        ``PagedDecodeEngine`` compiled once per (slots, length bucket,
+        page size) on the sub-mesh's first device. Candidate ``c`` of a
+        row seeded ``s`` samples from ``fold_in(PRNGKey(s), c)`` — streams
+        are composition-independent, so a row's tokens are identical
+        whether it decodes alone or shares the engine with other rows.
+
+        Live admission: when the executor injected an ``AdmissionPort``
+        (``payload["_admit"]``, rule ``live=True``), the engine's poll
+        hook pulls compatible queued tasks into the *running* decode loop
+        whenever slots free up — their rows join mid-flight with zero new
+        compilations (the engine's jitted admit/step executables are shape
+        stable) and their result rows follow the initial members' rows,
+        matching the worker's member fan-out order.
+        """
+        dev = submesh.devices.flat[0]
+        n = int(payload["n"])
+        length = int(payload["length"])
+        temp = float(payload.get("temperature", 1.0))
+        page_size = int(payload.get("page_size", 8))
+        port = payload.get("_admit")
+        bbs, seeds, row_lens = self._paged_parse(payload, length)
+        R0 = bbs.shape[0]
+        slots = int(payload.get("decode_slots", 0)) \
+            or min(max(R0 * n, 4), 32)
+        eng = self._compiled(
+            f"paged{slots}_L{length}_p{page_size}", dev,
+            lambda: prot.PagedDecodeEngine(
+                self.gen_cfg, slots=slots, max_new=length,
+                page_size=page_size, device=dev))
+        ver, gparams = self.param_store.current()
+        gp = self._params_on(("gen", ver), gparams, dev)
+
+        records = []           # (tag0, n_rows) in result-row order
+
+        def specs_for(bb, sds, rl, tag0):
+            out = []
+            for r in range(bb.shape[0]):
+                ckeys = _fold_in_keys(sds[r], n)
+                out += [dict(backbone=bb[r], key=ckeys[c],
+                             length=int(rl[r]), tag=(tag0, r, c))
+                        for c in range(n)]
+            records.append((tag0, bb.shape[0]))
+            return out
+
+        admitted = []
+        occ_rows = [(int(row_lens.sum()), R0)]
+
+        def poll(free):
+            if port is None or free < n:
+                return []
+            out = []
+            for t in port.take(free // n):
+                admitted.append(t)
+                abb, asd, arl = self._paged_parse(t.payload, length)
+                out += specs_for(abb, asd, arl, len(admitted))
+                occ_rows.append((int(arl.sum()), abb.shape[0]))
+            return out
+
+        with eng.lock:
+            res = eng.run(gp, temp, specs=specs_for(bbs, seeds, row_lens, 0),
+                          poll=poll)
+        rows = []
+        for tag0, nr in sorted(records):
+            for r in range(nr):
+                picks = [res[(tag0, r, c)] for c in range(n)]
+                rows.append((np.stack([p[0] for p in picks]).astype(np.int32),
+                             np.asarray([p[1] for p in picks], np.float32)))
+        R = sum(nr for _, nr in records)
+        tok_sum = sum(s for s, _ in occ_rows)
+        batch = {"rows": R, "bucket": slots,
+                 "occupancy": min(1.0, (R * n) / slots), "devices": 1,
+                 "len_occupancy": tok_sum / float(R * length),
+                 "decode": "paged", "admitted": len(admitted)}
+        gen_batch_log.append(batch)
+        return {"rows": rows, "batch": dict(batch), "gen_version": ver}
+
     def register_all(self, executor, generate_batch_rows: int = None,
-                     coalesce: bool = True, length_buckets=None):
+                     coalesce: bool = True, length_buckets=None,
+                     decode_kernel: bool = False):
         """Register every task fn (and, when the executor supports it, the
         batched kinds' coalesce rules). ``generate_batch_rows`` bounds the
         fused generate batch — pass ``ProtocolConfig.generate_batch_size``
@@ -457,7 +579,9 @@ class ProteinPayload:
         the coalesce rules (benchmark baselines register their own).
         ``length_buckets`` installs campaign-derived token-dim bucket edges
         (masked payload padding + masked coalesce keys); None keeps the
-        payload's current table (global ``LENGTH_BUCKETS`` by default)."""
+        payload's current table (global ``LENGTH_BUCKETS`` by default).
+        ``decode_kernel=True`` marks the generate_batch rule ``live`` so
+        paged dispatches can admit queued tasks mid-decode."""
         if length_buckets is not None:
             self.length_buckets = tuple(length_buckets)
         executor.register("generate", self.generate)
@@ -474,7 +598,8 @@ class ProteinPayload:
                 generate_batch_coalesce_rule(
                     max_rows=(generate_batch_rows if generate_batch_rows
                               else BATCH_BUCKETS[-1]),
-                    prefix_len=self.gen_cfg.frontend_seq))
+                    prefix_len=self.gen_cfg.frontend_seq,
+                    live=decode_kernel))
 
 
 def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
@@ -546,7 +671,8 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
 
 def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
                                  admission_window: float = 0.005,
-                                 prefix_len: int = None):
+                                 prefix_len: int = None,
+                                 live: bool = False):
     """Coalescing contract for ``generate_batch`` tasks: one-row tasks from
     *different* pipelines with the same (n, length, backbone prefix shape,
     temperature) stack into one device batch; per-row seeds keep each
@@ -558,7 +684,12 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
     the protocol) additionally fuse across *backbone lengths*: backbones
     are compared and merged on their ``prefix_len`` prefix (all the model
     consumes), so pipelines for different-size receptors share one device
-    batch. Masked and legacy tasks never fuse with each other."""
+    batch. Masked and legacy tasks never fuse with each other, and paged
+    tasks (``decode == "paged"``) only fuse with paged ones — the decode
+    mode is part of the compatibility key. ``live=True`` lets the paged
+    payload pull compatible queued tasks into a *running* decode loop via
+    the executor's ``AdmissionPort`` (inert for the dense path, which
+    never polls the port)."""
     from repro.runtime.executor import CoalesceRule
 
     def bbs(task):
@@ -571,16 +702,18 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
     def key(task):
         p = task.payload
         shape = bbs(task).shape[1:]
-        if "row_lens" in p:
+        decode = p.get("decode")
+        if "row_lens" in p or decode == "paged":
             if prefix_len:
                 shape = (min(shape[0], prefix_len),) + shape[1:]
-            return ("masked", int(p["n"]), int(p["length"]), shape,
+            return ("masked", decode, int(p["n"]), int(p["length"]), shape,
                     float(p.get("temperature", 1.0)))
         return (int(p["n"]), int(p["length"]), shape,
                 float(p.get("temperature", 1.0)))
 
     def merge(tasks):
-        masked = "row_lens" in tasks[0].payload
+        p0 = tasks[0].payload
+        masked = "row_lens" in p0 or p0.get("decode") == "paged"
         stacks = [bbs(t) for t in tasks]
         if masked and prefix_len:
             stacks = [b[:, :prefix_len] for b in stacks]
@@ -588,13 +721,18 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
                  "seeds": np.concatenate(
                      [np.asarray(t.payload["seeds"], np.int64).reshape(-1)
                       for t in tasks]),
-                 "n": tasks[0].payload["n"],
-                 "length": tasks[0].payload["length"],
-                 "temperature": tasks[0].payload.get("temperature", 1.0)}
+                 "n": p0["n"],
+                 "length": p0["length"],
+                 "temperature": p0.get("temperature", 1.0)}
         if masked:
             fused["row_lens"] = np.concatenate(
-                [np.asarray(t.payload["row_lens"], np.int32).reshape(-1)
+                [np.asarray(t.payload.get(
+                     "row_lens", np.full(bbs(t).shape[0], int(p0["length"]),
+                                         np.int32)), np.int32).reshape(-1)
                  for t in tasks])
+        for k in ("decode", "decode_slots", "page_size"):
+            if k in p0:
+                fused[k] = p0[k]
         return fused
 
     def split(tasks, result):
@@ -602,7 +740,7 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
 
     return CoalesceRule(key=key, merge=merge, split=split, rows=n_rows,
                         max_rows=max_rows,
-                        admission_window=admission_window)
+                        admission_window=admission_window, live=live)
 
 
 def clear_compile_log():

@@ -84,6 +84,17 @@ class ProtocolConfig:
     #   receptor lengths fuse into one dense device batch. Deterministic
     #   per pipeline: the bucket decision is made here, at task-creation
     #   time, never by what else happens to be queued.
+    decode_kernel: bool = False
+    #   True stamps batched generate payloads ``decode="paged"`` — they run
+    #   as continuous token-level decode over a paged KV cache (Pallas
+    #   decode kernel, live mid-decode admission) instead of per-row dense
+    #   sampling. Requires generate_batch_size >= 1. Sampling streams stay
+    #   per-(seed, candidate), so results are batch-composition-independent
+    #   (though not bit-identical to the dense path's streams).
+    decode_slots: int = 0
+    #   Decode slots per paged engine (0: payload picks a default). One
+    #   slot holds one (row, candidate) decode stream; admission waits for
+    #   a free slot, so more slots = more concurrent streams per device.
 
 
 def fitness(metrics: Dict[str, float]) -> float:
@@ -196,6 +207,10 @@ class ImpressProtocol(DesignProtocol):
                 # true length — so different-length pipelines share a key
                 payload["length"] = bucket_len(L, c.length_buckets)
                 payload["row_lens"] = [L]
+            if c.decode_kernel:
+                payload["decode"] = "paged"
+                if c.decode_slots:
+                    payload["decode_slots"] = c.decode_slots
             return Task(kind="generate_batch", pipeline_id=pl.uid,
                         payload=payload,
                         resources=ResourceRequest(n_devices=1, rows=1))
@@ -214,11 +229,19 @@ class ImpressProtocol(DesignProtocol):
         # "fasta" input) for the structure-prediction task
         complex_seq = np.concatenate(
             [np.asarray(seqs[i], np.int32), pl.meta["peptide_tokens"]])
-        return Task(kind="predict", pipeline_id=pl.uid, payload={
+        payload = {
             "sequence": complex_seq,
             "target": pl.meta["target"],
             "receptor_len": pl.meta["receptor_len"],
-        }, resources=ResourceRequest(n_devices=self.cfg.predict_devices))
+        }
+        if self.cfg.length_buckets:
+            # masked form: the payload pads to the length bucket and scores
+            # with the shared predict_mb1_L{bucket} executable instead of
+            # minting one per exact complex length
+            payload["seq_len"] = int(complex_seq.shape[0])
+        return Task(kind="predict", pipeline_id=pl.uid, payload=payload,
+                    resources=ResourceRequest(
+                        n_devices=self.cfg.predict_devices))
 
     def _batch_k(self, pl: Pipeline) -> int:
         """Rows for the next predict_batch: the configured top-k, capped by

@@ -253,10 +253,12 @@ def attn_fwd(p, x, positions, cfg, *, causal=True, window=0, kv_x=None,
     q, k, v = _qkv(p, x, kv_x, positions, cfg, rope=rope)
     if cfg.attn_impl in ("pallas", "pallas_interpret") and causal and kv_x is x:
         from repro.kernels import ops as kops
+        # "pallas" auto-resolves: compiled on TPU, interpret elsewhere
+        # (overridable via IMPRESS_PALLAS_INTERPRET — see kernels/_compat)
         out = kops.flash_attention(
             q, k, v, causal=True, window=window,
             softcap=cfg.attn_logit_softcap,
-            interpret=(cfg.attn_impl == "pallas_interpret"))
+            interpret=(True if cfg.attn_impl == "pallas_interpret" else None))
     elif cfg.attn_impl == "xla_chunked" and kv_x is x:
         pos = positions if positions is not None else jnp.arange(x.shape[1])
         out = _sdpa_xla_chunked(q, k, v, pos, pos, cfg, causal=causal,
@@ -344,6 +346,65 @@ def attn_decode(p, x, t, cfg, *, cache, window=0, cross=False):
     }
     mask = make_mask(pos[0], cache["pos"], True, window)[None, None, None]
     out = _sdpa_xla(q, cache["k"], cache["v"], mask, cfg)
+    return _proj_out(p, out, cfg), cache
+
+
+def init_paged_cache(cfg, n_pages, page_size, dtype=None):
+    """Paged cache for one attention layer: a shared pool of fixed-size
+    K/V pages. ``n_pages`` includes any reserved trash page the caller
+    points inactive rows at; rows map logical->physical pages via the
+    block tables threaded through the paged attn calls."""
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    shape = (n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
+def _paged_write(cache, k, v, page_ids, slots):
+    """Scatter new K/V into pages. k/v (B,S,KV,hd); page_ids/slots (B,S).
+    Duplicate (page, slot) targets only occur on the trash page (inactive
+    rows), where last-write-wins is harmless."""
+    B, S, KV, hd = k.shape
+    pid = page_ids.reshape(-1)
+    sl = slots.reshape(-1)
+    kf = k.astype(cache["k_pages"].dtype).reshape(B * S, KV, hd)
+    vf = v.astype(cache["v_pages"].dtype).reshape(B * S, KV, hd)
+    return {"k_pages": cache["k_pages"].at[pid, :, sl].set(kf),
+            "v_pages": cache["v_pages"].at[pid, :, sl].set(vf)}
+
+
+def paged_attn_prefill(p, x, positions, cfg, *, cache, block_tables):
+    """Prompt attention for freshly admitted rows, writing K/V into the
+    rows' pages. x (B,S,d); positions (S,) = arange(S) for fresh rows;
+    block_tables (B,maxp). Causal over the prompt itself (the pages hold
+    nothing older). Returns (out (B,S,d), cache)."""
+    q, k, v = _qkv(p, x, x, positions, cfg)
+    page_size = cache["k_pages"].shape[2]
+    page_ids = block_tables[:, positions // page_size]          # (B,S)
+    slots = jnp.broadcast_to((positions % page_size)[None],
+                             page_ids.shape)
+    cache = _paged_write(cache, k, v, page_ids, slots)
+    mask = make_mask(positions, positions, True, 0)[None, None, None]
+    out = _sdpa_xla(q, k, v, mask, cfg)
+    return _proj_out(p, out, cfg), cache
+
+
+def paged_attn_decode(p, x, positions, cfg, *, cache, block_tables,
+                      lengths, interpret=None):
+    """One-token decode over the paged cache. x (B,1,d); positions (B,)
+    per-row write position of the new token; lengths (B,) valid K/V count
+    *including* the new token (0 = inactive slot — its block table points
+    at the trash page, its output row is zero). Returns (out, cache)."""
+    pos = positions[:, None]                                    # (B,1)
+    q, k, v = _qkv(p, x, x, pos, cfg)
+    page_size = cache["k_pages"].shape[2]
+    page_ids = jnp.take_along_axis(block_tables,
+                                   (positions // page_size)[:, None], axis=1)
+    cache = _paged_write(cache, k, v, page_ids,
+                         (positions % page_size)[:, None])
+    from repro.kernels import ops as kops
+    out = kops.paged_decode_attention(
+        q, cache["k_pages"], cache["v_pages"], block_tables, lengths,
+        page_size=page_size, interpret=interpret)
     return _proj_out(p, out, cfg), cache
 
 

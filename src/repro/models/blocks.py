@@ -25,6 +25,10 @@ from repro.models.moe import init_moe, moe_fwd
 ATTN_KINDS = ("attn", "attn_local", "enc_attn", "dec_attn", "moe",
               "attn_local_moe")
 
+# layer kinds the paged decode path supports: dense causal full attention
+# (windowed/ring, cross-attn and SSM caches have no paged layout)
+PAGED_KINDS = ("attn",)
+
 
 def _window(kind, cfg):
     return cfg.attn_window if kind in ("attn_local", "attn_local_moe") else 0
@@ -190,6 +194,40 @@ def layer_decode(kind, p, x, t, cfg, cache, ctx=None):
     return x, cache
 
 
+def init_layer_paged_cache(kind, cfg, n_pages, page_size, dtype=None):
+    if kind not in PAGED_KINDS:
+        raise ValueError(
+            f"paged decode supports dense causal {PAGED_KINDS} layers, "
+            f"got {kind!r}")
+    return attn.init_paged_cache(cfg, n_pages, page_size, dtype=dtype)
+
+
+def layer_paged_prefill(kind, p, x, ctx, cfg, cache):
+    """Prompt forward for fresh rows, writing K/V into their pages."""
+    assert kind in PAGED_KINDS, kind
+    h = norm_fwd(p["norm1"], x, cfg)
+    h, cache = attn.paged_attn_prefill(p["attn"], h, ctx["positions"], cfg,
+                                       cache=cache,
+                                       block_tables=ctx["block_tables"])
+    x = x + h
+    x = x + mlp_fwd(p["mlp"], norm_fwd(p["norm2"], x, cfg), cfg)
+    return x, cache
+
+
+def layer_paged_decode(kind, p, x, ctx, cfg, cache):
+    """Single-token step over the paged cache. x (B,1,d)."""
+    assert kind in PAGED_KINDS, kind
+    h = norm_fwd(p["norm1"], x, cfg)
+    h, cache = attn.paged_attn_decode(p["attn"], h, ctx["positions"], cfg,
+                                      cache=cache,
+                                      block_tables=ctx["block_tables"],
+                                      lengths=ctx["lengths"],
+                                      interpret=ctx.get("interpret"))
+    x = x + h
+    x = x + mlp_fwd(p["mlp"], norm_fwd(p["norm2"], x, cfg), cfg)
+    return x, cache
+
+
 # ---------------------------------------------------------------------------
 # segments (stacked layers, lax.scan)
 # ---------------------------------------------------------------------------
@@ -276,6 +314,55 @@ def segment_prefill(seg_params, x, kinds, ctx, cfg, caches):
             outs.append(c)
         caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     return x, caches
+
+
+def init_segment_paged_cache(kinds, repeats, cfg, n_pages, page_size,
+                             dtype=None):
+    one = {f"{i}_{kind}": init_layer_paged_cache(kind, cfg, n_pages,
+                                                 page_size, dtype=dtype)
+           for i, kind in enumerate(kinds)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (repeats,) + x.shape),
+                        one)
+
+
+def _segment_paged(layer_fn, seg_params, x, kinds, ctx, cfg, caches):
+    def body(carry, xs):
+        layer_params, cache = xs
+        h = carry
+        new_caches = {}
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            h, c = layer_fn(kind, layer_params[key], h, ctx, cfg, cache[key])
+            new_caches[key] = c
+        return h, new_caches
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, (seg_params, caches))
+    else:
+        reps = jax.tree.leaves(seg_params)[0].shape[0]
+        outs = []
+        for r in range(reps):
+            lp = jax.tree.map(lambda a: a[r], seg_params)
+            cc = jax.tree.map(lambda a: a[r], caches)
+            x, c = body(x, (lp, cc))
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, caches
+
+
+def segment_paged_prefill(seg_params, x, kinds, ctx, cfg, caches):
+    """Prompt prefill through a stacked segment into paged caches.
+    ctx: positions (S,), block_tables (B,maxp)."""
+    return _segment_paged(layer_paged_prefill, seg_params, x, kinds, ctx,
+                          cfg, caches)
+
+
+def segment_paged_decode(seg_params, x, kinds, ctx, cfg, caches):
+    """Single-token step through a stacked segment over paged caches.
+    ctx: positions (B,), block_tables (B,maxp), lengths (B,),
+    interpret (static)."""
+    return _segment_paged(layer_paged_decode, seg_params, x, kinds, ctx,
+                          cfg, caches)
 
 
 def segment_decode(seg_params, x, t, kinds, cfg, caches, ctx=None):

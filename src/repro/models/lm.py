@@ -189,6 +189,54 @@ def decode_step(params, caches, token, t, cfg):
     return logits, new_caches
 
 
+def init_paged_caches(cfg, n_pages, page_size, dtype=None):
+    """Paged caches, one stacked pool per segment. ``n_pages`` includes
+    any reserved trash page. Only dense causal 'attn' segments qualify
+    (blocks.PAGED_KINDS); others raise at init."""
+    return [blocks.init_segment_paged_cache(kinds, reps, cfg, n_pages,
+                                            page_size, dtype=dtype)
+            for kinds, reps in cfg.segments]
+
+
+def paged_prefill(params, batch, cfg, caches, block_tables):
+    """Run fresh rows' prompts, writing K/V into their pages (mapped by
+    ``block_tables`` (B,maxp)). Returns (last-position logits, caches).
+    Unlike ``prefill`` the caches are the caller's long-lived page pool —
+    shape-stable across admissions."""
+    x, positions, _ = _prefix_embed(params, batch, cfg)
+    ctx = {"positions": positions, "block_tables": block_tables}
+    new_caches = []
+    for seg, cache, (kinds, _) in zip(params["segments"], caches,
+                                      cfg.segments):
+        x, cache = blocks.segment_paged_prefill(seg, x, kinds, ctx, cfg,
+                                                cache)
+        new_caches.append(cache)
+    logits = logits_fwd(params, x[:, -1:], cfg)[:, 0]
+    return logits, new_caches
+
+
+def paged_decode_step(params, caches, token, positions, block_tables,
+                      lengths, cfg, *, interpret=None):
+    """One decode step with *per-row* positions over paged caches.
+
+    token (B,1) i32; positions (B,) each row's write position (its current
+    true length); lengths (B,) valid K/V count including the new token —
+    0 marks an inactive slot (block table rows point at the trash page,
+    logits for that row are garbage and must be masked by the caller).
+    Returns (logits (B,V), caches)."""
+    x = embed_tokens(params["embedding"], token, cfg)
+    ctx = {"positions": positions, "block_tables": block_tables,
+           "lengths": lengths, "interpret": interpret}
+    new_caches = []
+    for seg, cache, (kinds, _) in zip(params["segments"], caches,
+                                      cfg.segments):
+        x, cache = blocks.segment_paged_decode(seg, x, kinds, ctx, cfg,
+                                               cache)
+        new_caches.append(cache)
+    logits = logits_fwd(params, x, cfg)[:, 0]
+    return logits, new_caches
+
+
 def generate(params, batch, cfg, steps, cache_len=0, temperature=0.0, key=None):
     """Greedy/temperature generation loop (host-side scan)."""
     logits, caches, t0 = prefill(params, batch, cfg,

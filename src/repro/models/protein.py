@@ -16,6 +16,7 @@ FoldScore — AlphaFold analogue: predicts structure-confidence metrics for a
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, NamedTuple
 
 import jax
@@ -128,6 +129,253 @@ def progen_sample(params, backbone, n, length, cfg, key, temperature=1.0,
         tok_lps = jnp.concatenate([lp0[None], step_lps], axis=0).T  # (B*n,L)
         return seqs.reshape(B, n, length), tok_lps.reshape(B, n, length)
     return seqs.reshape(B, n, length), lp.reshape(B, n)
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous-batching decode engine
+# ---------------------------------------------------------------------------
+
+
+class PagedDecodeEngine:
+    """Continuous-batching ProGen sampler over a paged KV cache.
+
+    A fixed number of decode *slots* share one pool of fixed-size K/V
+    pages (``lm.init_paged_caches``); per-slot block tables and true
+    lengths live host-side. Admission prefils one row's prompt into
+    freshly popped pages (a fixed (1, S0) executable) and samples its
+    first token; every step advances all active slots through one fused
+    ``lm.paged_decode_step``; retirement reads the finished row out,
+    returns its pages to a LIFO free pool and zeroes its true length —
+    so rows of different lengths enter and leave a *running* batch
+    without any shape change. ``trace_counts`` increments only when a
+    jitted body is (re)traced: a warm engine admitting/retiring rows
+    must keep it constant (the zero-recompile probe the tests assert).
+
+    Sampling streams are composition-independent: row token ``i`` is
+    drawn with ``fold_in(base_key, i)`` where ``base_key`` rides in with
+    the spec — never from batch-level split order — and the batch shape
+    is constant, so a row's tokens are bit-identical whether it decodes
+    alone or joins mid-flight (tests/test_paged_decode.py).
+    """
+
+    def __init__(self, cfg, *, slots, max_new, page_size=8, device=None,
+                 interpret=None):
+        from collections import deque
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_new = int(max_new)
+        self.page_size = int(page_size)
+        self.prompt_len = cfg.frontend_seq + 1          # patches + BOS
+        self.pages_per_row = -(-(self.prompt_len + self.max_new - 1)
+                               // self.page_size)
+        self.n_pages = self.slots * self.pages_per_row
+        self.trash_page = self.n_pages                  # reserved page id
+        self.device = device
+        self.interpret = interpret
+        self.lock = threading.Lock()                    # one run at a time
+        # device_put of a numpy array can be zero-copy on CPU, so the
+        # async-dispatched computation would alias host buffers we mutate
+        # in place (block_tables, true_lens) — always hand jax a copy.
+        self._put = lambda x: jax.device_put(
+            jax.tree.map(lambda a: a.copy() if isinstance(a, np.ndarray)
+                         else a, x), device)
+        # host bookkeeping
+        self.free_pages = list(range(self.n_pages))     # LIFO pool
+        self.block_tables = np.full((self.slots, self.pages_per_row),
+                                    self.trash_page, np.int32)
+        self.true_lens = np.zeros(self.slots, np.int32)
+        self.base_keys = np.zeros((self.slots, 2), np.uint32)
+        self._slot_meta = [None] * self.slots
+        self._pending = deque()
+        self._results = {}
+        self.alloc_log = []                             # (tag, page ids)
+        self.trace_counts = {"admit": 0, "step": 0}
+        # device state
+        self.caches = self._put(lm_mod.init_paged_caches(
+            cfg, self.n_pages + 1, self.page_size))
+        self.cur_tok = self._put(np.zeros((self.slots, 1), np.int32))
+        self.out_toks = self._put(np.zeros((self.slots, self.max_new),
+                                           np.int32))
+        self.acc_lp = self._put(np.zeros(self.slots, np.float32))
+        # donate the engine-owned state (caches + per-slot arrays): the
+        # update is in-place on device instead of copying the whole page
+        # pool every admit/step — the copies would grow with slots and
+        # dominate the step at wide batches. The engine always rebinds
+        # self.* from the outputs, so the consumed buffers are never read.
+        self._admit_fn = jax.jit(self._build_admit(),
+                                 donate_argnums=(6, 7, 8, 9))
+        self._step_fn = jax.jit(self._build_step(),
+                                donate_argnums=(1, 2, 3, 4))
+
+    # -- jitted bodies ---------------------------------------------------
+
+    def _build_admit(self):
+        cfg, S0 = self.cfg, self.prompt_len
+
+        def fn(params, backbone, bt_row, slot, base_key, temp,
+               caches, cur_tok, out_toks, acc_lp):
+            self.trace_counts["admit"] += 1     # traces only on compile
+            patches = encode_structure(params, backbone, cfg)
+            bos = jnp.zeros((1, 1), jnp.int32)
+            logits, caches = lm_mod.paged_prefill(
+                params, {"inputs": bos, "patches": patches}, cfg, caches,
+                bt_row[None])
+            logits = logits.astype(jnp.float32).at[:, cfg.vocab_size:].set(
+                -1e30)
+            k0 = jax.random.fold_in(base_key, 0)
+            tok0 = jax.random.categorical(k0, logits / temp, axis=-1)
+            lp0 = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                      tok0[:, None], -1)[0, 0]
+            cur_tok = cur_tok.at[slot, 0].set(tok0[0])
+            row = jnp.zeros((out_toks.shape[1],), jnp.int32).at[0].set(
+                tok0[0])
+            out_toks = out_toks.at[slot].set(row)
+            acc_lp = acc_lp.at[slot].set(lp0)
+            return caches, cur_tok, out_toks, acc_lp
+
+        return fn
+
+    def _build_step(self):
+        cfg, S0 = self.cfg, self.prompt_len
+        interpret = self.interpret
+
+        def fn(params, caches, cur_tok, out_toks, acc_lp, block_tables,
+               true_lens, base_keys, temp):
+            self.trace_counts["step"] += 1      # traces only on compile
+            active = true_lens > 0
+            lengths = jnp.where(active, true_lens + 1, 0)
+            logits, caches = lm_mod.paged_decode_step(
+                params, caches, cur_tok, true_lens, block_tables, lengths,
+                cfg, interpret=interpret)
+            logits = logits.astype(jnp.float32).at[:, cfg.vocab_size:].set(
+                -1e30)
+            idx = true_lens - S0 + 1            # tokens sampled so far
+            keys = jax.vmap(jax.random.fold_in)(base_keys, idx)
+            nxt = jax.vmap(
+                lambda k, lg: jax.random.categorical(k, lg / temp))(
+                    keys, logits)
+            step_lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                          nxt[:, None], -1)[:, 0]
+            rows = jnp.arange(nxt.shape[0])
+            col = jnp.clip(idx, 0, out_toks.shape[1] - 1)
+            keep = out_toks[rows, col]
+            out_toks = out_toks.at[rows, col].set(
+                jnp.where(active, nxt, keep))
+            acc_lp = acc_lp + jnp.where(active, step_lp, 0.0)
+            cur_tok = jnp.where(active[:, None], nxt[:, None], cur_tok)
+            return caches, cur_tok, out_toks, acc_lp
+
+        return fn
+
+    # -- host-side lifecycle ---------------------------------------------
+
+    def submit(self, *, backbone, key, length, tag):
+        """Queue one row: backbone (frontend_seq, 16) f32, a (2,) uint32
+        base PRNG key, the number of tokens to sample, and an opaque
+        result tag. Admitted into the running batch as soon as a slot
+        frees up."""
+        length = int(length)
+        if not 1 <= length <= self.max_new:
+            raise ValueError(f"length {length} outside [1, {self.max_new}]")
+        bb = np.asarray(backbone, np.float32)[:self.cfg.frontend_seq]
+        self._pending.append({"backbone": bb,
+                              "key": np.asarray(key, np.uint32).reshape(2),
+                              "length": length, "tag": tag})
+
+    def free_slots(self) -> int:
+        return sum(m is None for m in self._slot_meta)
+
+    def active_slots(self) -> int:
+        return sum(m is not None for m in self._slot_meta)
+
+    def _admit(self, spec, params, temperature):
+        slot = self._slot_meta.index(None)
+        need = -(-(self.prompt_len + spec["length"] - 1) // self.page_size)
+        pages = [self.free_pages.pop() for _ in range(need)]
+        row = np.full(self.pages_per_row, self.trash_page, np.int32)
+        row[:need] = pages
+        self.block_tables[slot] = row
+        self.base_keys[slot] = spec["key"]
+        self.alloc_log.append((spec["tag"], tuple(pages)))
+        (self.caches, self.cur_tok, self.out_toks,
+         self.acc_lp) = self._admit_fn(
+            params, self._put(spec["backbone"][None]), self._put(row),
+            np.int32(slot), self._put(spec["key"]),
+            np.float32(temperature), self.caches, self.cur_tok,
+            self.out_toks, self.acc_lp)
+        self.true_lens[slot] = self.prompt_len
+        self._slot_meta[slot] = {"tag": spec["tag"],
+                                 "length": spec["length"], "done": 1}
+        if spec["length"] <= 1:
+            self._retire(slot)
+
+    def _retire(self, slot, out_host=None, lp_host=None):
+        """Free a finished row's pages and record its result. ``out_host``
+        / ``lp_host`` are optional host snapshots of out_toks / acc_lp so
+        a step retiring many rows pays one device->host read, not 2/row."""
+        meta = self._slot_meta[slot]
+        if out_host is None:
+            out_host = np.asarray(self.out_toks)
+            lp_host = np.asarray(self.acc_lp)
+        toks = np.asarray(out_host[slot, :meta["length"]], np.int32)
+        ll = float(lp_host[slot])
+        for pid in self.block_tables[slot]:
+            if pid != self.trash_page:
+                self.free_pages.append(int(pid))
+        self.block_tables[slot] = self.trash_page
+        self.true_lens[slot] = 0
+        self._slot_meta[slot] = None
+        self._results[meta["tag"]] = (toks, ll)
+
+    def _pump(self, params, temperature):
+        while self._pending and self.free_slots():
+            self._admit(self._pending.popleft(), params, temperature)
+
+    def step(self, params, temperature):
+        """Advance every active slot one token; retire finished rows."""
+        (self.caches, self.cur_tok, self.out_toks,
+         self.acc_lp) = self._step_fn(
+            params, self.caches, self.cur_tok, self.out_toks, self.acc_lp,
+            self._put(self.block_tables), self._put(self.true_lens),
+            self._put(self.base_keys), np.float32(temperature))
+        finished = []
+        for slot, meta in enumerate(self._slot_meta):
+            if meta is None:
+                continue
+            self.true_lens[slot] += 1
+            meta["done"] += 1
+            if meta["done"] >= meta["length"]:
+                finished.append(slot)
+        if finished:
+            out_host = np.asarray(self.out_toks)
+            lp_host = np.asarray(self.acc_lp)
+            for slot in finished:
+                self._retire(slot, out_host, lp_host)
+
+    def run(self, params, temperature, specs=(), poll=None):
+        """Decode ``specs`` (plus anything ``poll`` injects) to completion.
+
+        ``poll(free_slots) -> [spec dicts]`` is called once per loop
+        iteration — the live-admission hook: rows it returns join the
+        *running* batch at the next admission, and the engine only shuts
+        down after a final poll comes back empty. Returns {tag: (tokens
+        (L,) i32, loglik float)} for every row retired this run."""
+        for s in specs:
+            self.submit(**s)
+        while True:
+            self._pump(params, temperature)
+            if poll is not None:
+                new = list(poll(self.free_slots()))
+                if new:
+                    for s in new:
+                        self.submit(**s)
+                    self._pump(params, temperature)
+            if not self.active_slots() and not self._pending:
+                break
+            if self.active_slots():
+                self.step(params, temperature)
+        out, self._results = self._results, {}
+        return out
 
 
 # ---------------------------------------------------------------------------

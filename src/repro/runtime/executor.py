@@ -69,13 +69,65 @@ class CoalesceRule:
     one result per member; ``rows`` is a member's batch-row footprint.
     ``admission_window`` > 0 enables rolling admission: the dispatch stays
     open that many seconds so compatible tasks queued after the dequeue
-    still join the batch (closing early once ``max_rows`` is reached)."""
+    still join the batch (closing early once ``max_rows`` is reached).
+    ``live`` goes further: the worker injects an ``AdmissionPort`` into the
+    dispatch payload as ``payload["_admit"]``, letting the payload fn pull
+    compatible queued tasks into the batch *while it is already running on
+    device* (continuous batching — rows join a decode loop mid-flight).
+    Members admitted through the port are fanned back out by ``split``
+    exactly like dequeue-time members; their result rows must follow the
+    initial members' rows in the fused result."""
     key: Callable[[Task], Any]
     merge: Callable[[List[Task]], dict]
     split: Callable[[List[Task], Any], List[Any]]
     rows: Callable[[Task], int]
     max_rows: int = 64
     admission_window: float = 0.0
+    live: bool = False
+
+
+class AdmissionPort:
+    """Live-admission handle a worker injects into a running dispatch's
+    payload (``payload["_admit"]``) when its rule has ``live=True``.
+
+    The payload fn calls ``take(k)`` between device steps: up to ``k``
+    batch rows of compatible queued tasks leave the queue and join the
+    running dispatch. Admitted tasks are tracked/transitioned immediately
+    (so ``cancel`` and failure injection can reach them) and appended to
+    ``admitted`` — the worker merges them into the dispatch's member list
+    before fanning the result back out. A payload fn that never polls the
+    port admits nothing; the port is inert."""
+
+    def __init__(self, executor: "AsyncExecutor", rule: CoalesceRule,
+                 leader: Task, sub: SubMesh, budget: int):
+        self._ex = executor
+        self._rule = rule
+        self._pred = executor._compatible_with(leader, rule)
+        self._sub = sub
+        self.budget = int(budget)
+        self.admitted: List[Task] = []
+        self._lock = threading.Lock()
+
+    def take(self, k: int) -> List[Task]:
+        """Admit up to ``k`` rows of compatible queued tasks; returns the
+        newly admitted tasks (possibly empty)."""
+        with self._lock:
+            k = min(int(k), self.budget)
+            if k <= 0:
+                return []
+            taken = self._ex.queue.pop_matching(self._pred,
+                                                rows=self._rule.rows,
+                                                budget=k)
+            if not taken:
+                return []
+            self._ex._track(taken, self._sub)
+            for m in taken:
+                m.set_state(TaskState.SCHEDULED)
+                m.set_state(TaskState.EXEC_SETUP)
+                m.set_state(TaskState.RUNNING)
+            self.admitted.extend(taken)
+            self.budget -= sum(self._rule.rows(m) for m in taken)
+            return list(taken)
 
 
 class AsyncExecutor:
@@ -287,6 +339,15 @@ class AsyncExecutor:
             self._track([task], sub)
             members, payload = self._coalesce_members(task, sub)
             sub = self._maybe_regrow(task, sub, members)
+            rule = self._coalesce.get(task.kind)
+            port = None
+            if rule is not None and rule.live and task.retries == 0:
+                # continuous batching: the payload fn can pull compatible
+                # queued tasks into the running dispatch via this port
+                port = AdmissionPort(
+                    self, rule, task, sub,
+                    rule.max_rows - sum(rule.rows(m) for m in members))
+                payload = dict(payload, _admit=port)
             if task.preemptible:
                 # hand the payload fn its live task so it can observe
                 # preempt_requested/canceled between steps
@@ -305,6 +366,10 @@ class AsyncExecutor:
                 for m in members:
                     m.set_state(TaskState.RUNNING)
                 result = fn(sub, payload)
+                if port is not None and port.admitted:
+                    # live-admitted rows follow the initial members' rows
+                    # in the fused result — same fan-out as dequeue-time
+                    members = members + port.admitted
                 results = (self._coalesce[task.kind].split(members, result)
                            if len(members) > 1 else [result])
                 for m, r in zip(members, results):
@@ -318,6 +383,9 @@ class AsyncExecutor:
                             self._durations.setdefault(m.kind, []).append(d)
                     finished.append(m)
             except Exception as e:  # noqa: BLE001 — any payload failure
+                if port is not None and port.admitted \
+                        and port.admitted[-1] is not members[-1]:
+                    members = members + port.admitted  # retry them too
                 err = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
                 retried: List[Task] = []
                 for m in members:

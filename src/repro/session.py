@@ -64,6 +64,8 @@ class ProtocolSpec:
     max_sub_pipelines: int = 4
     score_batch: int = 0
     generate_batch_size: int = 0
+    decode_kernel: bool = False       # paged KV continuous decode
+    decode_slots: int = 0             # slots per paged engine (0: default)
     gen_devices: int = 1
     predict_devices: int = 1
     temperature: float = 1.0
@@ -165,6 +167,7 @@ def _impress_cfg(ps: ProtocolSpec, cs: CampaignSpec, *, adaptive: bool
         max_sub_pipelines=ps.max_sub_pipelines if adaptive else 0,
         score_batch=ps.score_batch,
         generate_batch_size=ps.generate_batch_size,
+        decode_kernel=ps.decode_kernel, decode_slots=ps.decode_slots,
         gen_devices=ps.gen_devices, predict_devices=ps.predict_devices,
         temperature=ps.temperature,
         length_buckets=campaign_length_buckets(cs),
@@ -312,7 +315,10 @@ class ImpressSession:
         self.payload.register_all(self.executor,
                                   generate_batch_rows=gbs or None,
                                   coalesce=spec.coalesce,
-                                  length_buckets=self.length_buckets)
+                                  length_buckets=self.length_buckets,
+                                  decode_kernel=any(
+                                      ps.decode_kernel
+                                      for ps in self.protocol_specs))
         self.bootstrap_s = time.monotonic() - t0   # payload + registry setup
         self.buffer = None
         self.trainer = None

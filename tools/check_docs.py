@@ -35,6 +35,7 @@ ARCH_SECTIONS = [
     "Task flow",
     "Batching and coalescing",
     "Length bucketing & masking",
+    "Decode kernel & paged KV cache",
     "Model evolution",
     "Adding a new task kind",
 ]
