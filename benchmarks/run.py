@@ -1,9 +1,10 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 table, plus the throughput benchmarks for the two batched hot stages.
-Prints ``name,us_per_call,derived`` CSV lines; the ``scoring`` and
-``generate`` entries additionally write machine-readable
-``BENCH_scoring.json`` / ``BENCH_generate.json`` records (candidates/sec,
-occupancy, speedup vs baseline) — the repo's perf trajectory across PRs.
+Prints ``name,us_per_call,derived`` CSV lines; the ``scoring``,
+``generate`` and ``pipeline`` entries additionally write machine-readable
+``BENCH_scoring.json`` / ``BENCH_generate.json`` / ``BENCH_pipeline.json``
+records (candidates/sec, occupancy, speedup vs baseline, per-stage waits)
+— the repo's perf trajectory across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,scoring,...]
 """
@@ -17,7 +18,7 @@ def emit(name, us_per_call, derived):
 
 
 BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution",
-           "scoring", "generate")
+           "scoring", "generate", "pipeline")
 
 
 def main() -> None:
@@ -59,6 +60,9 @@ def main() -> None:
         # paged continuous-decode sweep merges into the same record
         bench_generate.main(print, argv=["--decode-kernel", "--json",
                                          "BENCH_generate.json"])
+    if "pipeline" in only:
+        from benchmarks import bench_pipeline
+        bench_pipeline.main(print, argv=["--json", "BENCH_pipeline.json"])
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

@@ -1,0 +1,81 @@
+"""Three-stage binder design as a runnable demo: backbone-sample ->
+sequence-design -> fold/score, each stage its own task kind, param-set
+namespace and priority band, all flowing through ONE coordinator and
+executor. A rescore protocol floods the fold stage alongside, so the
+weighted-fair scheduler has something to be fair about.
+
+  PYTHONPATH=src python examples/binder_campaign.py [--fifo]
+
+The stage table is declarative (``CampaignSpec.stages``): this demo
+overrides the default table's share split to give the sampling band a
+bigger slice. ``--fifo`` disables fair scheduling for comparison (the
+fold flood then drains in priority/insertion order).
+
+This script simulates 8 devices (set BEFORE jax import — only examples
+and the dry-run may do this).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse    # noqa: E402
+
+from repro.session import (CampaignSpec, ImpressSession,  # noqa: E402
+                           ProtocolSpec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fifo", action="store_true",
+                    help="disable weighted-fair scheduling (baseline)")
+    args = ap.parse_args()
+
+    spec = CampaignSpec(
+        structures=3, receptor_len=24, peptide_len=6,
+        protocols=(
+            ProtocolSpec("binder", n_candidates=4, n_cycles=2,
+                         score_batch=2),
+            ProtocolSpec("rescore", n_cycles=4, score_batch=4),
+        ),
+        # the binder's stage table, declaratively: per-stage kind, param
+        # namespace, priority band and fair-share weight
+        stages=(
+            dict(name="backbone", kind="backbone_batch", band=0, share=2.0),
+            dict(name="seqdesign", kind="generate_batch", params="binder",
+                 band=0, share=2.0),
+            dict(name="fold", kind="predict_batch", params="multimer",
+                 band=1),
+        ),
+        fair_scheduling=not args.fifo,
+        seed=0, max_workers=4)
+
+    with ImpressSession(spec) as session:
+        print(f"pilot: {session.allocator.total_devices} devices; "
+              f"stage table: "
+              f"{[(s.name, s.kind, s.params, s.band) for s in session.stage_table]}")
+        report = session.run(timeout=600)
+
+    b = report.protocols["binder"]
+    print(f"\nbinder: pipelines={b['n_pipelines']} "
+          f"trajectories={b['trajectories']}")
+    for c, m in sorted(b["cycles"].items()):
+        print(f"  cycle {c}: pLDDT={m['plddt_median']:.2f} "
+              f"pTM={m['ptm_median']:.3f} (n={m['n']})")
+
+    print(f"\n=== per-stage report "
+          f"({'fifo' if args.fifo else 'fair'} scheduling) ===")
+    for name, s in sorted(report["stages"].items()):
+        if name.startswith("__"):
+            continue
+        wait = s["wait_s"] / max(s["tasks"], 1)
+        print(f"  {name:10s} tasks={s['tasks']:3d} "
+              f"dispatches={s['dispatches']:3d} rows={s['rows']:3d} "
+              f"mean_wait={wait * 1e3:6.1f}ms "
+              f"util={100 * s.get('utilization', 0.0):5.1f}%")
+    print(f"  makespan {report.makespan_s:.2f}s, shared-pilot utilization "
+          f"{100 * report.utilization:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

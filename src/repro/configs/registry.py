@@ -18,9 +18,11 @@ _MODULES = {
     # paper payload models
     "progen-s": "protein_impress",
     "foldscore-s": "protein_impress",
+    "foldscore-m": "protein_impress",
 }
 
-ARCH_IDS = tuple(k for k in _MODULES if k not in ("progen-s", "foldscore-s"))
+_PAPER_MODELS = ("progen-s", "foldscore-s", "foldscore-m")
+ARCH_IDS = tuple(k for k in _MODULES if k not in _PAPER_MODELS)
 
 
 def _module(arch_id: str):
@@ -35,6 +37,8 @@ def get_config(arch_id: str):
         return mod.progen_config()
     if arch_id == "foldscore-s":
         return mod.foldscore_config()
+    if arch_id == "foldscore-m":
+        return mod.foldscore_multimer_config()
     return mod.config()
 
 
@@ -44,6 +48,8 @@ def get_reduced(arch_id: str):
         cfg = mod.progen_reduced()
     elif arch_id == "foldscore-s":
         cfg = mod.foldscore_reduced()
+    elif arch_id == "foldscore-m":
+        cfg = mod.foldscore_multimer_reduced()
     else:
         cfg = mod.reduced()
     # large-scale memory knobs are irrelevant (and shape-hostile) at

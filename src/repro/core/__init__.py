@@ -12,9 +12,13 @@ from repro.core.multi_objective import (MultiObjectiveConfig,
 from repro.core.payload import ProteinPayload
 from repro.core.pipeline import Pipeline, ResourceRequest, Task, TaskState
 from repro.core.protocol import ImpressProtocol, ProtocolConfig, fitness
+from repro.core.stages import (BinderConfig, RescoreConfig, RescoreProtocol,
+                               StagedBinderProtocol, StageSpec,
+                               default_binder_stages)
 
 __all__ = ["Decision", "DesignProtocol", "Coordinator",
            "MultiObjectiveConfig", "MultiObjectiveProtocol",
            "ProteinPayload", "Pipeline", "ResourceRequest",
            "Task", "TaskState", "ImpressProtocol", "ProtocolConfig",
-           "fitness"]
+           "fitness", "StageSpec", "default_binder_stages", "BinderConfig",
+           "StagedBinderProtocol", "RescoreConfig", "RescoreProtocol"]

@@ -112,6 +112,15 @@ class DesignProtocol(ABC):
         to validate that the executor has a payload fn for each."""
         return tuple(self.handlers)
 
+    def stage_specs(self) -> tuple:
+        """The protocol's stage table (``core.stages.StageSpec`` entries).
+        Staged protocols stamp their tasks with stage labels / priority
+        bands / param namespaces; the session facade reads this table to
+        create the param-set namespaces, register per-stage coalesce
+        rules, and push band shares into the task queue. Default: the
+        protocol is unstaged."""
+        return ()
+
     # -- sub-pipelines -----------------------------------------------------
 
     def can_spawn(self) -> bool:

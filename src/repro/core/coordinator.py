@@ -382,6 +382,10 @@ class Coordinator:
             "gen_len_occupancy": (float(np.mean(self._gen_len_occupancy))
                                   if self._gen_len_occupancy else None),
             "allocator_shapes": self.executor.allocator.shape_stats(),
+            # per-stage sections (dispatch/wait/grant/utilization/bands)
+            # for staged campaigns; {} when nothing carried a stage label
+            "stages": (self.executor.stage_report()
+                       if hasattr(self.executor, "stage_report") else {}),
             "quality_by_version": self._quality_by_version(pls),
             "evolution": (None if self.trainer is None else
                           self.trainer.report(

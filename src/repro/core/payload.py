@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import threading
 import time
+import zlib
 from functools import partial
 from typing import Dict, List, Tuple
 
@@ -71,6 +72,9 @@ batch_log: List[dict] = []
 
 # Same, for generate_batch dispatches.
 gen_batch_log: List[dict] = []
+
+# Same, for backbone_batch dispatches (the staged protocols' first stage).
+backbone_log: List[dict] = []
 
 
 def _pad_rows(arrs: List[np.ndarray], rows: int):
@@ -141,11 +145,21 @@ class ProteinPayload:
         key = key if key is not None else jax.random.PRNGKey(0)
         kg, kf = jax.random.split(key)
         get = get_reduced if reduced else get_config
+        self._reduced = bool(reduced)
         self.gen_cfg = gen_cfg or get("progen-s")
         self.fold_cfg = fold_cfg or get("foldscore-s")
         self.param_store = ParamStore(prot.init_progen(kg, self.gen_cfg))
-        self.param_store.on_retire(self._drop_gen_versions)
+        self.param_store.on_retire(
+            partial(self._drop_gen_versions, "default"))
         self.fold_params = prot.init_foldscore(kf, self.fold_cfg)
+        # param-set namespaces (heterogeneous stages): task payloads pick a
+        # generator/scorer by ``payload["params"]``; "default" is the
+        # original single-model pair, so unstaged campaigns are untouched
+        self.gen_stores: Dict[str, ParamStore] = {
+            "default": self.param_store}
+        self.gen_cfgs: Dict[str, object] = {"default": self.gen_cfg}
+        self.fold_sets: Dict[str, Tuple] = {
+            "default": (self.fold_cfg, self.fold_params)}
         self.length = length
         # token-dim bucket edges for masked payloads; None = the global
         # LENGTH_BUCKETS table (campaigns pass denser histogram-derived
@@ -155,6 +169,42 @@ class ProteinPayload:
         self._cache: Dict[Tuple, callable] = {}
         self._cache_lock = threading.Lock()
         self._retired_versions: set = set()
+
+    # -- param-set namespaces ---------------------------------------------
+
+    def add_generator(self, name: str, key=None, cfg=None) -> ParamStore:
+        """Register a second sequence-design param set under ``name``: its
+        own versioned ``ParamStore`` (independently evolvable/hot-swappable)
+        and optionally its own config. Tasks select it with
+        ``payload["params"] == name``. Returns the store."""
+        if name in self.gen_stores:
+            return self.gen_stores[name]
+        from repro.configs.registry import get_config, get_reduced
+        cfg = cfg or (get_reduced if self._reduced else get_config)(
+            "progen-s")
+        # crc32, not hash(): str hashing is salted per process and would
+        # make namespace inits differ across runs
+        key = key if key is not None else jax.random.PRNGKey(
+            zlib.crc32(name.encode()) & 0xFFFF)
+        store = ParamStore(prot.init_progen(key, cfg))
+        store.on_retire(partial(self._drop_gen_versions, name))
+        self.gen_stores[name] = store
+        self.gen_cfgs[name] = cfg
+        return store
+
+    def add_scorer(self, name: str, key=None, cfg=None):
+        """Register a second fold/score param set under ``name`` (e.g. the
+        ``foldscore-m`` multimer variant for a binder protocol's fold
+        stage). Tasks select it with ``payload["params"] == name``."""
+        if name in self.fold_sets:
+            return self.fold_sets[name]
+        from repro.configs.registry import get_config, get_reduced
+        cfg = cfg or (get_reduced if self._reduced else get_config)(
+            "foldscore-m")
+        key = key if key is not None else jax.random.PRNGKey(
+            zlib.crc32(name.encode()) & 0xFFFF)
+        self.fold_sets[name] = (cfg, prot.init_foldscore(key, cfg))
+        return self.fold_sets[name]
 
     @property
     def gen_params(self):
@@ -176,12 +226,13 @@ class ProteinPayload:
         return fn
 
     def _params_on(self, which, params, device):
-        """Per-device param copy, cached by ``which`` — ``("gen", version)``
-        for generator params, so stale copies are evicted *by version* when
-        the store retires one (never by cache-key position). A version
-        retired mid-dispatch (two publishes inside one dispatch's window)
-        is used uncached: the retire hook has already run for it, so a
-        late insert would never be evicted again."""
+        """Per-device param copy, cached by ``which`` — ``("gen",
+        namespace, version)`` for generator params, so stale copies are
+        evicted *by version, per namespace* when a store retires one
+        (never by cache-key position). A version retired mid-dispatch
+        (two publishes inside one dispatch's window) is used uncached: the
+        retire hook has already run for it, so a late insert would never
+        be evicted again."""
         key = (which, "params", device.id)
         with self._cache_lock:
             p = self._cache.get(key)
@@ -190,23 +241,37 @@ class ProteinPayload:
             with self._cache_lock:
                 # tombstone check at insert time: the version may have been
                 # retired while the device transfer was in flight
-                retired = (isinstance(which, tuple) and which[0] == "gen"
-                           and which[1] in self._retired_versions)
-                if not retired:
+                if which not in self._retired_versions:
                     self._cache[key] = p
         return p
 
-    def _drop_gen_versions(self, versions):
-        """ParamStore retire hook: evict per-device copies of retired
-        generator versions from the cache (and remember them, so an
-        in-flight dispatch can't re-insert one after this ran)."""
+    def _drop_gen_versions(self, namespace, versions):
+        """ParamStore retire hook (bound per namespace): evict per-device
+        copies of the namespace's retired generator versions from the cache
+        (and remember them, so an in-flight dispatch can't re-insert one
+        after this ran)."""
         with self._cache_lock:
-            self._retired_versions.update(versions)
+            self._retired_versions.update(
+                ("gen", namespace, v) for v in versions)
             stale = [k for k in self._cache
                      if isinstance(k[0], tuple) and k[0][0] == "gen"
-                     and k[0][1] in versions]
+                     and k[0][1] == namespace and k[0][2] in versions]
             for k in stale:
                 del self._cache[k]
+
+    def _gen_set(self, payload):
+        """(namespace, store, cfg, compile-key suffix) for a sampling
+        payload — ``payload["params"]`` picks the generator param set."""
+        ns = payload.get("params") or "default"
+        sfx = "" if ns == "default" else f"@{ns}"
+        return ns, self.gen_stores[ns], self.gen_cfgs[ns], sfx
+
+    def _fold_set(self, payload):
+        """(namespace, cfg, params, compile-key suffix) for a scoring
+        payload — ``payload["params"]`` picks the fold param set."""
+        ns = payload.get("params") or "default"
+        cfg, params = self.fold_sets[ns]
+        return ns, cfg, params, ("" if ns == "default" else f"@{ns}")
 
     # -- task functions ---------------------------------------------------
 
@@ -222,7 +287,8 @@ class ProteinPayload:
         devices = list(submesh.devices.flat)
         per = int(np.ceil(n / len(devices)))
         backbone = np.asarray(payload["backbone"], np.float32)[None]
-        ver, gparams = self.param_store.current()
+        ns, store, gcfg, sfx = self._gen_set(payload)
+        ver, gparams = store.current()
         keys = _fold_in_keys(payload["seed"], len(devices))
         futures = []
         for i, dev in enumerate(devices):
@@ -230,13 +296,13 @@ class ProteinPayload:
             if take <= 0:
                 break
             fn = self._compiled(
-                f"generate{take}_L{length}_t{temp}", dev,
+                f"generate{take}_L{length}_t{temp}{sfx}", dev,
                 lambda take=take: jax.jit(
                     partial(prot.progen_sample, n=take, length=length,
-                            cfg=self.gen_cfg, temperature=temp)))
+                            cfg=gcfg, temperature=temp)))
             k = jax.device_put(keys[i], dev)
-            bb = jax.device_put(backbone[:, :self.gen_cfg.frontend_seq], dev)
-            gp = self._params_on(("gen", ver), gparams, dev)
+            bb = jax.device_put(backbone[:, :gcfg.frontend_seq], dev)
+            gp = self._params_on(("gen", ns, ver), gparams, dev)
             futures.append(fn(gp, bb, key=k))
         seqs = np.concatenate([np.asarray(s[0][0]) for s in futures])[:n]
         lls = np.concatenate([np.asarray(s[1][0]) for s in futures])[:n]
@@ -256,7 +322,8 @@ class ProteinPayload:
         seq = np.asarray(payload["sequence"], np.int32)[None]
         tgt = np.asarray(payload["target"], np.float32)[None]
         split = int(payload["receptor_len"])
-        fp = self._params_on("fold", self.fold_params, dev)
+        ns, fcfg, fparams, sfx = self._fold_set(payload)
+        fp = self._params_on(("fold", ns), fparams, dev)
         if payload.get("seq_len") is not None:
             true_len = int(payload["seq_len"])
             Lb = bucket_len(seq.shape[1], self.length_buckets)
@@ -265,17 +332,17 @@ class ProteinPayload:
                     [seq, np.zeros((1, Lb - seq.shape[1]), np.int32)],
                     axis=1)
             fn = self._compiled(
-                f"predict_mb1_L{Lb}", dev,
+                f"predict_mb1_L{Lb}{sfx}", dev,
                 lambda: jax.jit(partial(prot.foldscore_fwd_masked,
-                                        cfg=self.fold_cfg)))
+                                        cfg=fcfg)))
             m = fn(fp, jax.device_put(seq, dev), jax.device_put(tgt, dev),
                    jax.device_put(np.asarray([true_len], np.int32), dev),
                    jax.device_put(np.asarray([split], np.int32), dev))
         else:
             fn = self._compiled(
-                f"predict{seq.shape[1]}_{split}", dev,
+                f"predict{seq.shape[1]}_{split}{sfx}", dev,
                 lambda: jax.jit(partial(prot.foldscore_fwd,
-                                        cfg=self.fold_cfg,
+                                        cfg=fcfg,
                                         chain_split=split)))
             m = fn(fp, jax.device_put(seq, dev), jax.device_put(tgt, dev))
         return {"plddt": float(m.plddt[0]), "ptm": float(m.ptm[0]),
@@ -307,6 +374,7 @@ class ProteinPayload:
         if seqs.ndim == 1:
             seqs = seqs[None]
         R, L = seqs.shape
+        ns, fcfg, fparams, sfx = self._fold_set(payload)
         tgt = np.asarray(payload["target"], np.float32)
         if tgt.ndim == 1:
             tgt = np.tile(tgt[None], (R, 1))
@@ -335,22 +403,22 @@ class ProteinPayload:
         futures = []
         for i, dev in enumerate(devices):
             sl = slice(i * per, (i + 1) * per)
-            fp = self._params_on("fold", self.fold_params, dev)
+            fp = self._params_on(("fold", ns), fparams, dev)
             s = jax.device_put(seqs[sl], dev)
             t = jax.device_put(tgt[sl], dev)
             if masked:
                 fn = self._compiled(
-                    f"predict_mb{per}_L{L}", dev,
+                    f"predict_mb{per}_L{L}{sfx}", dev,
                     lambda: jax.jit(partial(prot.foldscore_fwd_masked,
-                                            cfg=self.fold_cfg)))
+                                            cfg=fcfg)))
                 futures.append(fn(fp, s, t,
                                   jax.device_put(seq_lens[sl], dev),
                                   jax.device_put(splits[sl], dev)))
             else:
                 fn = self._compiled(
-                    f"predict_b{per}_L{L}_{split}", dev,
+                    f"predict_b{per}_L{L}_{split}{sfx}", dev,
                     lambda: jax.jit(partial(prot.foldscore_fwd,
-                                            cfg=self.fold_cfg,
+                                            cfg=fcfg,
                                             chain_split=split)))
                 futures.append(fn(fp, s, t))
         m = prot.FoldMetrics(
@@ -362,12 +430,12 @@ class ProteinPayload:
         batch_log.append(batch)
         return {"rows": prot.metrics_rows(m, R), "batch": dict(batch)}
 
-    def _gen_batch_builder(self, n, length, temp):
+    def _gen_batch_builder(self, n, length, temp, cfg=None):
         """Jitted (params, backbones (R,P,16), keys (R,2)) -> per-row
         samples ((R,n,L), (R,n)). vmap over rows with per-row PRNG keys:
         each row samples exactly as it would alone, so fused batches are
         reproducible per pipeline."""
-        cfg = self.gen_cfg
+        cfg = cfg or self.gen_cfg
 
         def row(params, bb, key):
             s, lp = prot.progen_sample(params, bb[None], n=n, length=length,
@@ -376,14 +444,14 @@ class ProteinPayload:
 
         return jax.jit(jax.vmap(row, in_axes=(None, 0, 0)))
 
-    def _gen_batch_builder_masked(self, n, length, temp):
+    def _gen_batch_builder_masked(self, n, length, temp, cfg=None):
         """Masked variant: every row samples at the shared bucketed
         ``length``; a per-row ``row_len`` (traced) masks the log-likelihood
         to the row's true length, and the host truncates the returned
         tokens. A row's stream depends only on (seed, bucket) — never on
         which other rows share the batch — so mixed-length fusion stays
         deterministic per pipeline."""
-        cfg = self.gen_cfg
+        cfg = cfg or self.gen_cfg
 
         def row(params, bb, key, row_len):
             s, tok_lps = prot.progen_sample(
@@ -445,26 +513,28 @@ class ProteinPayload:
         keys = np.stack([(s64 >> np.uint64(32)).astype(np.uint32),
                          (s64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)],
                         axis=1)
-        bbs = bbs[:, :self.gen_cfg.frontend_seq]
-        ver, gparams = self.param_store.current()  # whole-dispatch snapshot
+        ns, store, gcfg, sfx = self._gen_set(payload)
+        bbs = bbs[:, :gcfg.frontend_seq]
+        ver, gparams = store.current()  # whole-dispatch snapshot
         devices, per = _split_devices(submesh, B)
         ndev = len(devices)
         futures = []
         for i, dev in enumerate(devices):
             sl = slice(i * per, (i + 1) * per)
-            gp = self._params_on(("gen", ver), gparams, dev)
+            gp = self._params_on(("gen", ns, ver), gparams, dev)
             b = jax.device_put(bbs[sl], dev)
             k = jax.device_put(keys[sl], dev)
             if masked:
                 fn = self._compiled(
-                    f"generate_mb{per}_n{n}_L{length}_t{temp}", dev,
-                    lambda: self._gen_batch_builder_masked(n, length, temp))
+                    f"generate_mb{per}_n{n}_L{length}_t{temp}{sfx}", dev,
+                    lambda: self._gen_batch_builder_masked(n, length, temp,
+                                                           gcfg))
                 futures.append(fn(gp, b, k,
                                   jax.device_put(row_lens[sl], dev)))
             else:
                 fn = self._compiled(
-                    f"generate_b{per}_n{n}_L{length}_t{temp}", dev,
-                    lambda: self._gen_batch_builder(n, length, temp))
+                    f"generate_b{per}_n{n}_L{length}_t{temp}{sfx}", dev,
+                    lambda: self._gen_batch_builder(n, length, temp, gcfg))
                 futures.append(fn(gp, b, k))
         seqs = np.concatenate([np.asarray(f[0]) for f in futures])[:R]
         lls = np.concatenate([np.asarray(f[1]) for f in futures])[:R]
@@ -476,12 +546,77 @@ class ProteinPayload:
         gen_batch_log.append(batch)
         return {"rows": rows, "batch": dict(batch), "gen_version": ver}
 
-    def _paged_parse(self, payload, length):
+    def _backbone_batch_builder(self, m, sigma):
+        """Jitted (bases (R,P,16), targets (R,16), keys (R,2)) -> per-row
+        ((R,m,P,16) perturbed backbones, (R,m) target-fit scores). vmap
+        over rows with per-row PRNG keys, like ``_gen_batch_builder`` —
+        a row's candidates depend only on its own (base, seed), so fused
+        backbone batches are reproducible per pipeline."""
+        def row(base, tgt, key):
+            noise = jax.random.normal(key, (m,) + base.shape, base.dtype)
+            cands = base[None] + sigma * noise
+            emb = cands.mean(axis=1)            # (m, 16) pooled embedding
+            scores = -((emb - tgt[None]) ** 2).mean(axis=-1)
+            return cands, scores
+
+        return jax.jit(jax.vmap(row, in_axes=(0, 0, 0)))
+
+    def backbone_batch(self, submesh, payload):
+        """Backbone-sampling stage: perturb each row's base backbone into
+        ``m`` candidates and score their pooled-embedding fit against the
+        row's target — the cheap, wide first stage of a staged binder
+        pipeline (an RFdiffusion analogue at toy scale: many structures
+        proposed per call, the best carried forward).
+
+        payload: bases (R, P, 16) f32 (or (P, 16) for one row); targets
+        (R, 16) f32 (or (16,) shared); seeds (R,) per-row PRNG seeds;
+        m int; sigma float perturbation scale. Rows pad to a
+        ``BATCH_BUCKETS`` size and split across the sub-mesh like the
+        other batched kinds.
+
+        Returns {"rows": [(cands (m,P,16) f32, scores (m,) f32) per row],
+        "batch": occupancy info}."""
+        bases = np.asarray(payload["bases"], np.float32)
+        if bases.ndim == 2:
+            bases = bases[None]
+        R = bases.shape[0]
+        tgts = np.asarray(payload["targets"], np.float32)
+        if tgts.ndim == 1:
+            tgts = np.tile(tgts[None], (R, 1))
+        seeds = np.asarray(payload["seeds"], np.int64).reshape(-1)
+        m = int(payload["m"])
+        sigma = float(payload.get("sigma", 0.1))
+        (bases, tgts, seeds), B = _pad_rows([bases, tgts, seeds], R)
+        s64 = seeds.astype(np.uint64)
+        keys = np.stack([(s64 >> np.uint64(32)).astype(np.uint32),
+                         (s64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)],
+                        axis=1)
+        P = bases.shape[1]
+        devices, per = _split_devices(submesh, B)
+        futures = []
+        for i, dev in enumerate(devices):
+            sl = slice(i * per, (i + 1) * per)
+            fn = self._compiled(
+                f"backbone_b{per}_m{m}_P{P}_s{sigma}", dev,
+                lambda: self._backbone_batch_builder(m, sigma))
+            futures.append(fn(jax.device_put(bases[sl], dev),
+                              jax.device_put(tgts[sl], dev),
+                              jax.device_put(keys[sl], dev)))
+        cands = np.concatenate([np.asarray(f[0]) for f in futures])[:R]
+        scores = np.concatenate([np.asarray(f[1]) for f in futures])[:R]
+        rows = [(cands[r].astype(np.float32), scores[r].astype(np.float32))
+                for r in range(R)]
+        batch = {"rows": R, "bucket": B, "occupancy": R / B,
+                 "devices": len(devices)}
+        backbone_log.append(batch)
+        return {"rows": rows, "batch": dict(batch)}
+
+    def _paged_parse(self, payload, length, gcfg=None):
         """Normalize a paged generate payload's per-row arrays."""
         bbs = np.asarray(payload["backbones"], np.float32)
         if bbs.ndim == 2:
             bbs = bbs[None]
-        bbs = bbs[:, :self.gen_cfg.frontend_seq]
+        bbs = bbs[:, :(gcfg or self.gen_cfg).frontend_seq]
         seeds = np.asarray(payload["seeds"], np.int64).reshape(-1)
         rl = payload.get("row_lens")
         rl = (np.asarray(rl, np.int32).reshape(-1) if rl is not None
@@ -512,17 +647,18 @@ class ProteinPayload:
         temp = float(payload.get("temperature", 1.0))
         page_size = int(payload.get("page_size", 8))
         port = payload.get("_admit")
-        bbs, seeds, row_lens = self._paged_parse(payload, length)
+        ns, store, gcfg, sfx = self._gen_set(payload)
+        bbs, seeds, row_lens = self._paged_parse(payload, length, gcfg)
         R0 = bbs.shape[0]
         slots = int(payload.get("decode_slots", 0)) \
             or min(max(R0 * n, 4), 32)
         eng = self._compiled(
-            f"paged{slots}_L{length}_p{page_size}", dev,
+            f"paged{slots}_L{length}_p{page_size}{sfx}", dev,
             lambda: prot.PagedDecodeEngine(
-                self.gen_cfg, slots=slots, max_new=length,
+                gcfg, slots=slots, max_new=length,
                 page_size=page_size, device=dev))
-        ver, gparams = self.param_store.current()
-        gp = self._params_on(("gen", ver), gparams, dev)
+        ver, gparams = store.current()
+        gp = self._params_on(("gen", ns, ver), gparams, dev)
 
         records = []           # (tag0, n_rows) in result-row order
 
@@ -545,7 +681,7 @@ class ProteinPayload:
             out = []
             for t in port.take(free // n):
                 admitted.append(t)
-                abb, asd, arl = self._paged_parse(t.payload, length)
+                abb, asd, arl = self._paged_parse(t.payload, length, gcfg)
                 out += specs_for(abb, asd, arl, len(admitted))
                 occ_rows.append((int(arl.sum()), abb.shape[0]))
             return out
@@ -588,6 +724,7 @@ class ProteinPayload:
         executor.register("generate_batch", self.generate_batch)
         executor.register("predict", self.predict)
         executor.register("predict_batch", self.predict_batch)
+        executor.register("backbone_batch", self.backbone_batch)
         if coalesce and hasattr(executor, "register_coalescable"):
             executor.register_coalescable(
                 "predict_batch",
@@ -600,6 +737,55 @@ class ProteinPayload:
                               else BATCH_BUCKETS[-1]),
                     prefix_len=self.gen_cfg.frontend_seq,
                     live=decode_kernel))
+            executor.register_coalescable(
+                "backbone_batch", backbone_batch_coalesce_rule())
+
+    def coalesce_rule_for(self, kind: str, *, max_rows: int = None,
+                          admission_window: float = None):
+        """Build the coalesce rule for one of this payload's batched task
+        kinds with per-stage overrides — how ``register_stages`` turns a
+        ``StageSpec``'s coalesce knobs into a registered rule."""
+        kw = {}
+        if max_rows is not None:
+            kw["max_rows"] = int(max_rows)
+        if kind == "predict_batch":
+            return predict_batch_coalesce_rule(
+                length_buckets=self.length_buckets, **kw)
+        if kind == "generate_batch":
+            if admission_window is not None:
+                kw["admission_window"] = float(admission_window)
+            return generate_batch_coalesce_rule(
+                prefix_len=self.gen_cfg.frontend_seq, **kw)
+        if kind == "backbone_batch":
+            if admission_window is not None:
+                kw["admission_window"] = float(admission_window)
+            return backbone_batch_coalesce_rule(**kw)
+        raise KeyError(f"no coalesce rule for task kind {kind!r}")
+
+    def register_stages(self, executor, stages, coalesce: bool = True):
+        """Wire a stage table (``core.stages.StageSpec`` sequence) into the
+        executor: create each stage's param-set namespace (generator for
+        sampling kinds, scorer for fold kinds) and register its
+        stage-specific coalesce rule (keyed ``(kind, stage)`` — the
+        executor already keeps cross-stage tasks apart). Call after
+        ``register_all``; safe to call once per protocol sharing stages.
+        ``coalesce=False`` creates the namespaces but skips the rules, so
+        an unfused baseline campaign still resolves its param sets."""
+        for s in stages:
+            if s.params != "default":
+                if s.kind in ("generate", "generate_batch"):
+                    self.add_generator(s.params)
+                elif s.kind in ("predict", "predict_batch"):
+                    self.add_scorer(s.params)
+            if s.kind in ("predict", "generate"):  # solo kinds never fuse
+                continue
+            if coalesce and hasattr(executor, "register_coalescable"):
+                executor.register_coalescable(
+                    s.kind,
+                    self.coalesce_rule_for(
+                        s.kind, max_rows=s.max_rows,
+                        admission_window=s.admission_window),
+                    stage=s.name)
 
 
 def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
@@ -624,9 +810,11 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
         return int(np.asarray(task.payload["sequences"]).shape[-1])
 
     def key(task):
+        ns = task.payload.get("params")  # param-set namespace: tasks
+        # scoring with different fold param sets must never share a batch
         if "seq_lens" in task.payload:
-            return ("masked", bucket_len(width(task), length_buckets))
-        return (width(task), int(task.payload["receptor_len"]))
+            return ("masked", bucket_len(width(task), length_buckets), ns)
+        return (width(task), int(task.payload["receptor_len"]), ns)
 
     def merge(tasks):
         masked = "seq_lens" in tasks[0].payload
@@ -660,6 +848,8 @@ def predict_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
         if masked:
             fused["seq_lens"] = np.concatenate(lens)
             fused["chain_splits"] = np.concatenate(splits)
+        if tasks[0].payload.get("params"):
+            fused["params"] = tasks[0].payload["params"]
         return fused
 
     def split(tasks, result):
@@ -703,13 +893,14 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
         p = task.payload
         shape = bbs(task).shape[1:]
         decode = p.get("decode")
+        ns = p.get("params")   # param-set namespace never fuses across
         if "row_lens" in p or decode == "paged":
             if prefix_len:
                 shape = (min(shape[0], prefix_len),) + shape[1:]
             return ("masked", decode, int(p["n"]), int(p["length"]), shape,
-                    float(p.get("temperature", 1.0)))
+                    float(p.get("temperature", 1.0)), ns)
         return (int(p["n"]), int(p["length"]), shape,
-                float(p.get("temperature", 1.0)))
+                float(p.get("temperature", 1.0)), ns)
 
     def merge(tasks):
         p0 = tasks[0].payload
@@ -730,7 +921,7 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
                      "row_lens", np.full(bbs(t).shape[0], int(p0["length"]),
                                          np.int32)), np.int32).reshape(-1)
                  for t in tasks])
-        for k in ("decode", "decode_slots", "page_size"):
+        for k in ("decode", "decode_slots", "page_size", "params"):
             if k in p0:
                 fused[k] = p0[k]
         return fused
@@ -743,11 +934,59 @@ def generate_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
                         admission_window=admission_window, live=live)
 
 
+def backbone_batch_coalesce_rule(max_rows: int = BATCH_BUCKETS[-1],
+                                 admission_window: float = 0.005):
+    """Coalescing contract for ``backbone_batch`` tasks: one-row tasks
+    from different pipelines with the same (m, base shape, sigma) stack
+    into one device batch; per-row seeds keep each pipeline's candidate
+    stream, so fused backbone sampling is composition-independent exactly
+    like ``generate_batch``."""
+    from repro.runtime.executor import CoalesceRule
+
+    def bases(task):
+        b = np.asarray(task.payload["bases"], np.float32)
+        return b[None] if b.ndim == 2 else b
+
+    def n_rows(task):
+        return int(bases(task).shape[0])
+
+    def key(task):
+        p = task.payload
+        return (int(p["m"]), bases(task).shape[1:],
+                float(p.get("sigma", 0.1)), p.get("params"))
+
+    def merge(tasks):
+        p0 = tasks[0].payload
+
+        def tgts(t):
+            g = np.asarray(t.payload["targets"], np.float32)
+            return np.tile(g[None], (bases(t).shape[0], 1)) \
+                if g.ndim == 1 else g
+
+        fused = {"bases": np.concatenate([bases(t) for t in tasks]),
+                 "targets": np.concatenate([tgts(t) for t in tasks]),
+                 "seeds": np.concatenate(
+                     [np.asarray(t.payload["seeds"], np.int64).reshape(-1)
+                      for t in tasks]),
+                 "m": p0["m"], "sigma": p0.get("sigma", 0.1)}
+        if p0.get("params"):
+            fused["params"] = p0["params"]
+        return fused
+
+    def split(tasks, result):
+        return _fan_out_rows(tasks, result, n_rows)
+
+    return CoalesceRule(key=key, merge=merge, split=split, rows=n_rows,
+                        max_rows=max_rows,
+                        admission_window=admission_window)
+
+
 def clear_compile_log():
     for v in compile_log.values():
         v.clear()
     batch_log.clear()
     gen_batch_log.clear()
+    backbone_log.clear()
 
 
 class FinetunePayload:

@@ -58,6 +58,15 @@ class Task:
     preemptible: bool = False   # trainer-class task: held back while design
     #   work queues (scheduler aging guard excepted) and asked to yield its
     #   sub-mesh when a design task cannot fit (executor preemption)
+    stage: Optional[str] = None  # pipeline stage this task belongs to
+    #   (staged protocols: "backbone" / "seqdesign" / "fold" ...). Part of
+    #   the executor's coalescing compatibility key — same-stage tasks from
+    #   different pipelines/protocols fuse, cross-stage tasks never do —
+    #   and the allocator's grant accounting (per-stage shape/util stats)
+    band: int = 0               # scheduler priority band: the TaskQueue's
+    #   weighted-fair pick divides dispatches across bands by configured
+    #   shares, so an expensive stage cannot starve a cheap one (or vice
+    #   versa) beyond its share. Band 0 with no shares = plain FIFO
     preempt_requested: bool = False  # cooperative yield signal: the payload
     #   fn checks this between steps and returns early with resume state
 

@@ -132,8 +132,10 @@ class DeviceAllocator:
         self.allocations: Dict[int, SubMesh] = {}
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
-        self._busy_log: List[Tuple[float, float, int]] = []  # start,end,ndev
-        self._open: Dict[int, Tuple[float, int]] = {}
+        # (start, end, ndev, stage) — stage is the pipeline stage the grant
+        # served (None for unstaged tasks), feeding per-stage utilization
+        self._busy_log: List[Tuple[float, float, int, Optional[str]]] = []
+        self._open: Dict[int, Tuple[float, int, Optional[str]]] = {}
         self._shape_log: List[dict] = []  # row-proportional grant records
 
     # -- carving ---------------------------------------------------------
@@ -147,8 +149,8 @@ class DeviceAllocator:
         return None, None
 
     def request(self, n_devices: int,
-                preferred_shape: Optional[Tuple[int, ...]] = None
-                ) -> Optional[SubMesh]:
+                preferred_shape: Optional[Tuple[int, ...]] = None,
+                stage: Optional[str] = None) -> Optional[SubMesh]:
         with self._lock:
             cands = ([preferred_shape] if preferred_shape else
                      _block_shapes(n_devices, self.grid.shape))
@@ -166,7 +168,8 @@ class DeviceAllocator:
                 sub = SubMesh(devices=devs, mesh=Mesh(devs, names),
                               origin=tuple(origin), shape=tuple(shape))
                 self.allocations[sub.uid] = sub
-                self._open[sub.uid] = (time.monotonic(), sub.n_devices)
+                self._open[sub.uid] = (time.monotonic(), sub.n_devices,
+                                       stage)
                 return sub
             return None
 
@@ -177,8 +180,8 @@ class DeviceAllocator:
             sl = tuple(slice(o, o + s) for o, s in zip(sub.origin, sub.shape))
             self.free[sl] = ~self.dead[sl]
             del self.allocations[sub.uid]
-            start, ndev = self._open.pop(sub.uid)
-            self._busy_log.append((start, time.monotonic(), ndev))
+            start, ndev, stage = self._open.pop(sub.uid)
+            self._busy_log.append((start, time.monotonic(), ndev, stage))
 
     # -- batch-aware shapes ------------------------------------------------
 
@@ -193,22 +196,24 @@ class DeviceAllocator:
             n *= 2
         return max(int(floor), n)
 
-    def request_for_rows(self, rows: int, floor: int = 1
-                         ) -> Optional[SubMesh]:
+    def request_for_rows(self, rows: int, floor: int = 1,
+                         stage: Optional[str] = None) -> Optional[SubMesh]:
         """Carve a sub-mesh sized proportionally to a device batch's
         bucketed row count (replacing fixed per-kind device counts). Under
         device pressure the grant shrinks by halving toward ``floor``;
         returns None only when even ``floor`` devices cannot be carved.
-        Every grant is recorded for ``shape_stats``."""
+        Every grant is recorded for ``shape_stats`` (and, keyed by
+        ``stage``, for ``stage_shape_stats``)."""
         want = self.grant_for_rows(rows, floor)
         n = want
         while True:
-            sub = self.request(n)
+            sub = self.request(n, stage=stage)
             if sub is not None:
                 self._shape_log.append({
                     "rows": int(rows),
                     "bucket": bucket_rows(max(1, int(rows))),
-                    "want": want, "granted": n, "shape": sub.shape})
+                    "want": want, "granted": n, "shape": sub.shape,
+                    "stage": stage})
                 return sub
             if n <= floor:
                 return None
@@ -226,6 +231,41 @@ class DeviceAllocator:
                 if log else 0.0),
             "downsized": sum(1 for e in log if e["granted"] < e["want"]),
         }
+
+    def stage_shape_stats(self) -> Dict[str, dict]:
+        """Per-stage grant summary: how many device grants each pipeline
+        stage drew, their mean size, and mean rows per device — the shape
+        evidence that heterogeneous stages really got heterogeneous
+        allocations. Grants without a stage key are omitted."""
+        out: Dict[str, dict] = {}
+        for e in list(self._shape_log):
+            if e.get("stage") is None:
+                continue
+            s = out.setdefault(e["stage"], {"grants": 0, "devices": 0,
+                                            "rows": 0})
+            s["grants"] += 1
+            s["devices"] += e["granted"]
+            s["rows"] += e["rows"]
+        for s in out.values():
+            s["mean_granted"] = s["devices"] / s["grants"]
+            s["mean_rows_per_device"] = s["rows"] / max(s["devices"], 1)
+        return out
+
+    def stage_utilization(self, until: Optional[float] = None
+                          ) -> Dict[str, float]:
+        """Busy device-seconds per stage / (devices × wall-clock) — the
+        per-stage slice of ``utilization``. Unstaged grants land under the
+        ``None`` key so the slices still sum to the total."""
+        now = until or time.monotonic()
+        busy: Dict[Optional[str], float] = {}
+        for s, e, n, st in list(self._busy_log):
+            busy[st] = busy.get(st, 0.0) + (min(e, now) - s) * n
+        with self._lock:
+            for s, n, st in self._open.values():
+                busy[st] = busy.get(st, 0.0) + (now - s) * n
+        wall = max(now - self._t0, 1e-9)
+        return {st: b / (self.total_devices * wall)
+                for st, b in busy.items()}
 
     # -- failures / elasticity -------------------------------------------
 
@@ -277,17 +317,17 @@ class DeviceAllocator:
     def utilization(self, until: Optional[float] = None) -> float:
         """Busy device-seconds / (devices × wall-clock) since construction."""
         now = until or time.monotonic()
-        busy = sum((min(e, now) - s) * n for s, e, n in self._busy_log)
+        busy = sum((min(e, now) - s) * n for s, e, n, _ in self._busy_log)
         with self._lock:
-            busy += sum((now - s) * n for s, n in self._open.values())
+            busy += sum((now - s) * n for s, n, _ in self._open.values())
         wall = max(now - self._t0, 1e-9)
         return busy / (self.total_devices * wall)
 
     def busy_timeline(self, resolution: float = 0.05):
         """(times, busy_devices) series for utilization plots (Fig. 4/5)."""
         now = time.monotonic()
-        events = list(self._busy_log) + [
-            (s, now, n) for s, n in self._open.values()]
+        events = [(s, e, n) for s, e, n, _ in self._busy_log] + [
+            (s, now, n) for s, n, _ in self._open.values()]
         if not events:
             return [], []
         t = self._t0

@@ -134,16 +134,24 @@ class AsyncExecutor:
     def __init__(self, allocator: DeviceAllocator, *, max_workers: int = 8,
                  max_retries: int = 1, backfill: bool = True,
                  straggler_factor: Optional[float] = None,
-                 min_straggler_samples: int = 3, aging_s: float = 60.0):
+                 min_straggler_samples: int = 3, aging_s: float = 60.0,
+                 band_shares: Optional[Dict[int, float]] = None,
+                 now_fn: Optional[Callable[[], float]] = None):
         self.allocator = allocator
-        self.queue = TaskQueue(backfill=backfill, aging_s=aging_s)
+        self.queue = TaskQueue(backfill=backfill, aging_s=aging_s,
+                               now_fn=now_fn, band_shares=band_shares)
         self.completions: "queue.Queue[Task]" = queue.Queue()
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
         self._fns: Dict[str, Callable[[SubMesh, dict], Any]] = {}
         self._coalesce: Dict[str, CoalesceRule] = {}
+        # stage-specific rules override the kind-wide rule for tasks that
+        # carry that stage tag — different stages of one kind can fuse with
+        # different shape keys / row caps
+        self._coalesce_staged: Dict[Tuple[str, str], CoalesceRule] = {}
         self._coalesce_log: List[Tuple[int, int]] = []  # (n_tasks, n_rows)
+        self._stage_log: Dict[str, dict] = {}  # per-stage dispatch stats
         self._tasks: Dict[int, Task] = {}
         self._durations: Dict[str, List[float]] = {}
         self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
@@ -165,9 +173,22 @@ class AsyncExecutor:
     def register(self, kind: str, fn: Callable[[SubMesh, dict], Any]):
         self._fns[kind] = fn
 
-    def register_coalescable(self, kind: str, rule: CoalesceRule):
-        """Allow queued tasks of ``kind`` to fuse into shared dispatches."""
-        self._coalesce[kind] = rule
+    def register_coalescable(self, kind: str, rule: CoalesceRule,
+                             stage: Optional[str] = None):
+        """Allow queued tasks of ``kind`` to fuse into shared dispatches.
+        With ``stage`` set, the rule applies only to tasks tagged with that
+        stage (overriding any kind-wide rule for them)."""
+        if stage is None:
+            self._coalesce[kind] = rule
+        else:
+            self._coalesce_staged[(kind, stage)] = rule
+
+    def _rule_for(self, task: Task) -> Optional[CoalesceRule]:
+        if task.stage is not None:
+            rule = self._coalesce_staged.get((task.kind, task.stage))
+            if rule is not None:
+                return rule
+        return self._coalesce.get(task.kind)
 
     def registered_kinds(self) -> frozenset:
         """Task kinds with a registered payload fn — lets callers (the
@@ -234,9 +255,14 @@ class AsyncExecutor:
     # -- worker loop -------------------------------------------------------
 
     def _compatible_with(self, task: Task, rule: CoalesceRule):
+        # stage is part of compatibility at the executor level, so no rule
+        # needs to key on it: same-stage tasks from different pipelines and
+        # protocols fuse, cross-stage tasks never do (their payloads may be
+        # shape-compatible but draw different params / run different models)
         key = rule.key(task)
-        return lambda t: (t.kind == task.kind and not t.canceled
-                          and t.retries == 0 and rule.key(t) == key)
+        return lambda t: (t.kind == task.kind and t.stage == task.stage
+                          and not t.canceled and t.retries == 0
+                          and rule.key(t) == key)
 
     def _track(self, members: List[Task], sub: SubMesh):
         """Register dispatch members in ``_running`` as soon as they leave
@@ -251,7 +277,7 @@ class AsyncExecutor:
     def _coalesce_members(self, task: Task, sub: SubMesh):
         """Drain queued tasks compatible with ``task`` into one dispatch.
         Returns (member tasks, fused payload)."""
-        rule = self._coalesce.get(task.kind)
+        rule = self._rule_for(task)
         if rule is None:
             return [task], task.payload
         # retried tasks run solo: if a fused dispatch failed, re-fusing the
@@ -291,13 +317,14 @@ class AsyncExecutor:
         upgrade the allocation before running (keeping the original mesh
         whenever the pool can't do better right now)."""
         res = task.resources
-        rule = self._coalesce.get(task.kind)
+        rule = self._rule_for(task)
         if res.rows is None or rule is None or len(members) == 1:
             return sub
         rows = sum(rule.rows(m) for m in members)
         if self.allocator.grant_for_rows(rows, res.n_devices) <= sub.n_devices:
             return sub
-        bigger = self.allocator.request_for_rows(rows, floor=res.n_devices)
+        bigger = self.allocator.request_for_rows(rows, floor=res.n_devices,
+                                                 stage=task.stage)
         if bigger is None or bigger.n_devices <= sub.n_devices:
             if bigger is not None:
                 self.allocator.release(bigger)
@@ -312,14 +339,16 @@ class AsyncExecutor:
         it is about to coalesce), with ``n_devices`` as the floor."""
         res = task.resources
         if res.rows is None:
-            return self.allocator.request(res.n_devices, res.preferred_shape)
+            return self.allocator.request(res.n_devices, res.preferred_shape,
+                                          stage=task.stage)
         rows = int(res.rows)
-        rule = self._coalesce.get(task.kind)
+        rule = self._rule_for(task)
         if rule is not None and task.retries == 0:
             queued = self.queue.matching_rows(
                 self._compatible_with(task, rule), rows=rule.rows)
             rows = min(rule.max_rows, rows + queued)
-        return self.allocator.request_for_rows(rows, floor=res.n_devices)
+        return self.allocator.request_for_rows(rows, floor=res.n_devices,
+                                               stage=task.stage)
 
     def _worker(self):
         while not self._stop.is_set():
@@ -339,7 +368,7 @@ class AsyncExecutor:
             self._track([task], sub)
             members, payload = self._coalesce_members(task, sub)
             sub = self._maybe_regrow(task, sub, members)
-            rule = self._coalesce.get(task.kind)
+            rule = self._rule_for(task)
             port = None
             if rule is not None and rule.live and task.retries == 0:
                 # continuous batching: the payload fn can pull compatible
@@ -370,7 +399,7 @@ class AsyncExecutor:
                     # live-admitted rows follow the initial members' rows
                     # in the fused result — same fan-out as dequeue-time
                     members = members + port.admitted
-                results = (self._coalesce[task.kind].split(members, result)
+                results = (rule.split(members, result)
                            if len(members) > 1 else [result])
                 for m, r in zip(members, results):
                     if m.canceled:
@@ -382,6 +411,7 @@ class AsyncExecutor:
                         if d is not None:
                             self._durations.setdefault(m.kind, []).append(d)
                     finished.append(m)
+                self._record_stage(task, members, rule)
             except Exception as e:  # noqa: BLE001 — any payload failure
                 if port is not None and port.admitted \
                         and port.admitted[-1] is not members[-1]:
@@ -414,6 +444,31 @@ class AsyncExecutor:
             self._wake.set()
             for m in finished:
                 self.completions.put(m)
+
+    def _record_stage(self, task: Task, members: List[Task],
+                      rule: Optional[CoalesceRule]):
+        """Per-stage dispatch accounting (completed dispatches only):
+        dispatches, member tasks, batch rows, device run time, and the
+        queue-wait each member saw (RUNNING − QUEUED) — the executor half
+        of the stage report (the allocator holds grant shapes/util)."""
+        if task.stage is None:
+            return
+        with self._lock:
+            s = self._stage_log.setdefault(task.stage, {
+                "dispatches": 0, "tasks": 0, "rows": 0,
+                "run_s": 0.0, "wait_s": 0.0})
+            s["dispatches"] += 1
+            s["tasks"] += len(members)
+            s["rows"] += (sum(rule.rows(m) for m in members)
+                          if rule is not None else len(members))
+            for m in members:
+                d = m.duration()
+                if d is not None:
+                    s["run_s"] += d
+                q = m.timestamps.get("QUEUED")
+                r = m.timestamps.get("RUNNING")
+                if q is not None and r is not None:
+                    s["wait_s"] += max(0.0, r - q)
 
     # -- straggler watchdog --------------------------------------------
 
@@ -493,6 +548,35 @@ class AsyncExecutor:
             "mean_tasks_per_dispatch": (
                 sum(n for n, _ in log) / len(log) if log else 0.0),
         }
+
+    def stage_stats(self) -> Dict[str, dict]:
+        """Per-stage dispatch counters (see ``_record_stage``), with mean
+        occupancy (tasks per dispatch) and mean queue wait derived."""
+        with self._lock:
+            log = {s: dict(v) for s, v in self._stage_log.items()}
+        for v in log.values():
+            v["mean_tasks_per_dispatch"] = v["tasks"] / v["dispatches"]
+            v["mean_wait_s"] = v["wait_s"] / v["tasks"]
+        return log
+
+    def stage_report(self) -> Dict[str, dict]:
+        """The full stage-aware picture for coordinator reports: executor
+        dispatch stats merged with the allocator's per-stage grant shapes
+        and utilization slices, plus the queue's weighted-fair band
+        accounting under the ``"__bands__"`` key."""
+        report: Dict[str, dict] = self.stage_stats()
+        shapes = self.allocator.stage_shape_stats()
+        util = self.allocator.stage_utilization()
+        for stage in set(report) | set(shapes):
+            sec = report.setdefault(stage, {})
+            if stage in shapes:
+                sec["grants"] = shapes[stage]
+            if stage in util:
+                sec["utilization"] = util[stage]
+        bands = self.queue.band_stats()
+        if bands:
+            report["__bands__"] = bands
+        return report
 
     def stats(self) -> dict:
         done = [t for t in self._tasks.values() if t.state == TaskState.DONE]

@@ -37,9 +37,11 @@ import time
 from dataclasses import asdict, dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
-from repro.core import (Coordinator, DesignProtocol, ImpressProtocol,
-                        MultiObjectiveConfig, MultiObjectiveProtocol,
-                        ProteinPayload, ProtocolConfig)
+from repro.core import (BinderConfig, Coordinator, DesignProtocol,
+                        ImpressProtocol, MultiObjectiveConfig,
+                        MultiObjectiveProtocol, ProteinPayload,
+                        ProtocolConfig, RescoreConfig, RescoreProtocol,
+                        StagedBinderProtocol, StageSpec)
 from repro.core.payload import FinetunePayload
 from repro.data import protein_design_tasks
 from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService
@@ -70,6 +72,8 @@ class ProtocolSpec:
     predict_devices: int = 1
     temperature: float = 1.0
     seed: Optional[int] = None
+    stage_max_rows: Optional[int] = None   # staged protocols: per-dispatch
+    #   row cap for the protocol's stage rules (device-memory bound)
 
 
 @dataclass(frozen=True)
@@ -89,6 +93,15 @@ class CampaignSpec:
     receptor_len: Union[int, Tuple[int, ...]] = 24
     peptide_len: int = 6
     protocols: Tuple = (ProtocolSpec(),)   # ProtocolSpec entries or kind strs
+    # -- heterogeneous stages (staged protocols, e.g. kind="binder") --
+    stages: Tuple = ()   # StageSpec entries or dicts; () = the staged
+    #   protocol's default table (core.stages.default_binder_stages). The
+    #   session wires the union of all protocols' stage tables into the
+    #   payload registry (param namespaces + per-stage coalesce rules)
+    #   and, when fair_scheduling is on, the queue's band shares
+    fair_scheduling: bool = True   # push the stage tables' priority-band
+    #   shares into the TaskQueue (weighted-fair pick); False keeps plain
+    #   FIFO even for staged campaigns (the bench baseline)
     # -- length bucketing (mixed-length campaigns) --
     length_buckets: Optional[Tuple[int, ...]] = None   # explicit edges;
     #   None = derive from the campaign's length histogram when mixed
@@ -185,6 +198,34 @@ register_protocol("multi-objective", lambda ps, cs: (
         max_declines=ps.max_reselections,
         gen_devices=ps.gen_devices, predict_devices=ps.predict_devices,
         temperature=ps.temperature,
+        seed=cs.seed if ps.seed is None else ps.seed)), None))
+
+
+def campaign_stages(spec: CampaignSpec) -> Tuple[StageSpec, ...]:
+    """Normalize ``CampaignSpec.stages`` (StageSpec entries or dicts) into
+    a StageSpec tuple. Empty means 'use the protocol's default table'."""
+    return tuple(s if isinstance(s, StageSpec) else StageSpec(**s)
+                 for s in spec.stages)
+
+
+# the three-stage binder protocol: backbone-sample -> sequence-design ->
+# fold/score, each stage with its own param namespace and priority band
+register_protocol("binder", lambda ps, cs: (
+    StagedBinderProtocol(BinderConfig(
+        n_candidates=ps.n_candidates, n_cycles=ps.n_cycles,
+        max_reselections=ps.max_reselections,
+        score_batch=max(1, ps.score_batch),
+        temperature=ps.temperature,
+        length_buckets=campaign_length_buckets(cs),
+        stages=campaign_stages(cs),
+        seed=cs.seed if ps.seed is None else ps.seed)), None))
+# the fold-flood co-tenant (fairness benchmarks/tests): n_cycles rounds of
+# score_batch-row batched rescoring per pipeline on the fold stage
+register_protocol("rescore", lambda ps, cs: (
+    RescoreProtocol(RescoreConfig(
+        n_rounds=ps.n_cycles, rows=max(1, ps.score_batch),
+        length_buckets=campaign_length_buckets(cs),
+        max_rows=ps.stage_max_rows,
         seed=cs.seed if ps.seed is None else ps.seed)), None))
 
 
@@ -349,7 +390,27 @@ class ImpressSession:
             self.coordinator.add_protocol(proto, name=name,
                                           max_inflight=max_inflight)
             self.protocols[name] = proto
+        self._wire_stages(spec)
         self._populated = False
+
+    def _wire_stages(self, spec: CampaignSpec):
+        """Heterogeneous-stage wiring: the union of every protocol's stage
+        table gets (1) its param-set namespaces + per-stage coalesce rules
+        registered on the payload/executor and (2) its priority-band
+        shares pushed into the task queue (unless ``fair_scheduling`` is
+        off — the FIFO baseline). Unstaged campaigns: no-op."""
+        self.stage_table = [s for proto in self.protocols.values()
+                            for s in proto.stage_specs()]
+        if not self.stage_table:
+            return
+        self.payload.register_stages(self.executor, self.stage_table,
+                                     coalesce=spec.coalesce)
+        if spec.fair_scheduling:
+            shares: Dict[int, float] = {}
+            for s in self.stage_table:
+                shares[s.band] = max(shares.get(s.band, 0.0),
+                                     float(s.share))
+            self.executor.queue.set_band_shares(shares)
 
     # -- lifecycle ---------------------------------------------------------
 

@@ -1,0 +1,173 @@
+"""Property tests for the allocator's bucketing and shape arithmetic.
+
+Invariants (hypothesis when available; the deterministic edge-case tests
+below always run):
+
+- ``choose_length_buckets`` covers its own histogram: every length it was
+  built from pads by at most ``max_pad``, and every edge is a length that
+  actually occurred.
+- ``bucket_len`` is idempotent, its edges are fixed points, and past the
+  largest edge it stays a bounded multiple of it.
+- ``grant_for_rows`` never exceeds the healthy pool, never drops below the
+  floor, and is monotone in the row count.
+- ``request_for_rows`` only carves what the pool can hold: live grants sum
+  to at most the pool, and releasing everything restores it.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st  # noqa: F401
+
+import repro.core  # noqa: F401  — resolves the core<->runtime import cycle
+from repro.runtime.allocator import (BATCH_BUCKETS, DeviceAllocator,
+                                     bucket_len, bucket_rows,
+                                     choose_length_buckets)
+
+
+class FakeDev:
+    _n = 0
+
+    def __init__(self):
+        FakeDev._n += 1
+        self.id = FakeDev._n
+
+
+def fake_grid(n):
+    return np.array([FakeDev() for _ in range(n)], dtype=object)
+
+
+lengths_st = st.lists(st.integers(min_value=1, max_value=2048),
+                      min_size=1, max_size=64)
+pad_st = st.floats(min_value=0.01, max_value=0.5)
+
+
+# ---------------------------------------------------------------------------
+# choose_length_buckets / bucket_len
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(lengths_st, pad_st)
+def test_chosen_buckets_cover_their_histogram(lengths, max_pad):
+    edges = choose_length_buckets(lengths, max_pad=max_pad)
+    assert edges == tuple(sorted(edges))
+    assert set(edges) <= {int(v) for v in lengths}   # edges occurred
+    for L in lengths:
+        b = bucket_len(L, edges)
+        assert b >= L
+        # the fill guarantee the greedy construction promises
+        assert L / b >= 1.0 - max_pad - 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(lengths_st, pad_st, st.integers(min_value=1, max_value=4096))
+def test_bucket_len_idempotent_and_edges_fixed(lengths, max_pad, L):
+    edges = choose_length_buckets(lengths, max_pad=max_pad)
+    for e in edges:
+        assert bucket_len(e, edges) == e             # edges are fixed points
+    b = bucket_len(L, edges)
+    assert bucket_len(b, edges) == b                 # idempotent
+    assert b >= L
+    if L > max(edges):
+        # bounded overflow: the next multiple of the largest edge
+        assert b % max(edges) == 0 and b - L < max(edges)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=10_000))
+def test_bucket_rows_properties(n):
+    b = bucket_rows(n)
+    assert b >= n
+    assert bucket_rows(b) == b                       # idempotent
+    if b > BATCH_BUCKETS[-1]:
+        assert b % BATCH_BUCKETS[-1] == 0 and b < 2 * n
+    else:
+        assert b in BATCH_BUCKETS
+
+
+def test_bucket_tables_deterministic_edges():
+    # always-run anchors for the same invariants
+    assert choose_length_buckets([]) is None
+    assert choose_length_buckets([24, 24, 24]) == (24,)
+    edges = choose_length_buckets([100, 99, 90, 50, 10], max_pad=0.125)
+    assert edges == tuple(sorted(edges)) and 100 in edges
+    for L in (100, 99, 90, 50, 10):
+        assert L / bucket_len(L, edges) >= 0.875
+    assert bucket_len(513) == 1024                   # past the global table
+    assert bucket_rows(65) == 128
+
+
+# ---------------------------------------------------------------------------
+# grant_for_rows / request_for_rows against a fake pool
+# ---------------------------------------------------------------------------
+
+
+pool_st = st.integers(min_value=1, max_value=16)
+rows_st = st.integers(min_value=1, max_value=256)
+
+
+@settings(max_examples=200, deadline=None)
+@given(pool_st, rows_st, st.integers(min_value=1, max_value=4))
+def test_grant_for_rows_pool_bound_and_floored(pool, rows, floor):
+    alloc = DeviceAllocator(fake_grid(pool))
+    g = alloc.grant_for_rows(rows, floor=floor)
+    assert g >= floor
+    assert g <= max(floor, alloc.healthy_devices)
+    # above the floor the grant splits bucketed batches evenly
+    if g > floor:
+        assert g & (g - 1) == 0                      # power of two
+        assert g <= bucket_rows(rows)
+
+
+@settings(max_examples=200, deadline=None)
+@given(pool_st, st.lists(rows_st, min_size=2, max_size=8))
+def test_grant_for_rows_monotone_in_rows(pool, rows_list):
+    alloc = DeviceAllocator(fake_grid(pool))
+    grants = [alloc.grant_for_rows(r) for r in sorted(rows_list)]
+    assert grants == sorted(grants)
+
+
+@settings(max_examples=100, deadline=None)
+@given(pool_st, st.lists(rows_st, min_size=1, max_size=8))
+def test_request_for_rows_never_overcommits(pool, rows_list):
+    alloc = DeviceAllocator(fake_grid(pool))
+    subs = []
+    for r in rows_list:
+        sub = alloc.request_for_rows(r)
+        if sub is None:
+            continue                                 # pool exhausted: fine
+        assert sub.n_devices <= alloc.grant_for_rows(r)
+        subs.append(sub)
+    live = sum(s.n_devices for s in subs)
+    assert live <= alloc.total_devices
+    assert alloc.n_free == alloc.total_devices - live
+    for s in subs:
+        alloc.release(s)
+    assert alloc.n_free == alloc.total_devices       # fully restored
+
+
+def test_request_for_rows_shrinks_under_pressure():
+    # deterministic anchor: with most of an 8-pool held, a 64-row request
+    # halves down to what fits instead of failing
+    alloc = DeviceAllocator(fake_grid(8))
+    held = alloc.request(6)
+    assert held is not None
+    sub = alloc.request_for_rows(64)
+    assert sub is not None and sub.n_devices <= 2
+    stats = alloc.shape_stats()
+    assert stats["grants"] == 1 and stats["downsized"] == 1
+    alloc.release(sub)
+    alloc.release(held)
+    assert alloc.n_free == 8
+
+
+def test_request_for_rows_none_when_floor_cannot_fit():
+    alloc = DeviceAllocator(fake_grid(4))
+    held = alloc.request(4)
+    assert held is not None
+    assert alloc.request_for_rows(8, floor=2) is None
+    alloc.release(held)

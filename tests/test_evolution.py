@@ -165,15 +165,19 @@ def test_preemptible_held_back_while_design_work_queued():
 
 
 def test_aging_guard_unparks_starved_trainer_task():
-    q = TaskQueue(backfill=True, aging_s=0.05)
+    # injected clock: no sleeps, the aging threshold is crossed by
+    # advancing fake time
+    clock = [0.0]
+    q = TaskQueue(backfill=True, aging_s=0.05, now_fn=lambda: clock[0])
     big = _queued(Task(kind="gen", payload={}, resources=ResourceRequest(8)))
     trainer = _queued(Task(kind="ft", payload={}, priority=100,
                            preemptible=True,
                            resources=ResourceRequest(1)))
+    big.timestamps["QUEUED"] = trainer.timestamps["QUEUED"] = clock[0]
     q.push(big)
     q.push(trainer)
     assert q.pop_fitting(lambda n: n <= 1) is None   # not aged yet
-    time.sleep(0.06)
+    clock[0] += 0.06
     got = q.pop_fitting(lambda n: n <= 1)             # aged: backfills
     assert got is not None and got.uid == trainer.uid
 
@@ -288,16 +292,18 @@ def test_finetune_publishes_new_version_and_swaps_generator():
     tuner.finetune(sub, _finetune_batch(payload, seed=1))
     assert payload.param_store.versions() == [1, 2]
     with payload._cache_lock:
-        gen_vers = {k[0][1] for k in payload._cache
+        gen_vers = {k[0][2] for k in payload._cache
                     if isinstance(k[0], tuple) and k[0][0] == "gen"}
     assert 0 not in gen_vers
     # a dispatch holding a version retired mid-flight must not re-insert
     # its param copy into the cache (the retire hook already ran)
     ver0_params = payload.param_store.get(1)
-    payload._drop_gen_versions([1])
-    payload._params_on(("gen", 1), ver0_params, sub.devices.flat[0])
+    payload._drop_gen_versions("default", [1])
+    payload._params_on(("gen", "default", 1), ver0_params,
+                       sub.devices.flat[0])
     with payload._cache_lock:
-        assert not any(isinstance(k[0], tuple) and k[0] == ("gen", 1)
+        assert not any(isinstance(k[0], tuple)
+                       and k[0] == ("gen", "default", 1)
                        for k in payload._cache)
     alloc.release(sub)
 

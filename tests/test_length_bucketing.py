@@ -196,7 +196,7 @@ def test_predict_rule_fuses_heterogeneous_lengths():
     a = mk_predict_task(rng, 2, 12, 8, masked=True)
     b = mk_predict_task(rng, 3, 16, 11, masked=True)
     c = mk_predict_task(rng, 2, 14, 9, masked=True)
-    assert rule.key(a) == rule.key(b) == rule.key(c) == ("masked", 16)
+    assert rule.key(a) == rule.key(b) == rule.key(c) == ("masked", 16, None)
     fused = rule.merge([a, b, c])
     assert fused["sequences"].shape == (7, 16)
     np.testing.assert_array_equal(fused["seq_lens"],
@@ -222,7 +222,7 @@ def test_predict_rule_legacy_and_masked_never_fuse():
     masked = mk_predict_task(rng, 2, 16, 11, masked=True)
     assert rule.key(legacy) != rule.key(masked)
     # legacy keys stay the exact (L, split) — the seed behavior
-    assert rule.key(legacy) == (16, 11)
+    assert rule.key(legacy) == (16, 11, None)
     # legacy-only merges produce the seed payload shape (no seq_lens)
     fused = rule.merge([legacy, mk_predict_task(rng, 1, 16, 11, False)])
     assert "seq_lens" not in fused and "chain_splits" not in fused

@@ -1,0 +1,422 @@
+"""Heterogeneous multi-stage pipelines: weighted-fair band scheduling
+(deterministic fake clock — no sleeps), stage-aware coalescing (same-stage
+tasks fuse across protocols, cross-stage tasks never do), and the staged
+binder campaign end-to-end (three stages, two extra param sets, per-stage
+report sections, composition independence)."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import StagedBinderProtocol, BinderConfig, StageSpec
+from repro.core.pipeline import ResourceRequest, Task
+from repro.runtime import AsyncExecutor, DeviceAllocator, TaskQueue
+from repro.runtime.executor import CoalesceRule
+from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
+
+
+class FakeClock:
+    """Injected ``now_fn``: time advances only when the test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+def _task(band=0, n_devices=1, priority=0, preemptible=False,
+          queued_at=None):
+    t = Task(kind="x", payload={}, priority=priority,
+             resources=ResourceRequest(n_devices))
+    t.band = band
+    t.preemptible = preemptible
+    if queued_at is not None:
+        t.timestamps["QUEUED"] = queued_at
+    return t
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair band scheduling (fake clock throughout — zero sleeps)
+# ---------------------------------------------------------------------------
+
+
+def test_fold_flood_cannot_starve_sampling_trickle():
+    """A flood of fold-band tasks next to a trickle of sampling-band tasks:
+    with equal shares the trickle's dispatches interleave 1:1 — every
+    trickle task is served within the first 2*len(trickle) picks instead of
+    waiting out the whole flood."""
+    clock = FakeClock()
+    q = TaskQueue(backfill=True, aging_s=60.0, now_fn=clock,
+                  band_shares={0: 1.0, 1: 1.0})
+    flood = [_task(band=1, queued_at=0.0) for _ in range(20)]
+    trickle = [_task(band=0, queued_at=0.0) for _ in range(5)]
+    for t in flood + trickle:
+        q.push(t)
+    order = [q.pop_fitting(lambda n: True).band for _ in range(25)]
+    # the five trickle tasks all landed in the first ten picks
+    assert sorted(order[:10])[:5] == [0] * 5
+    stats = q.band_stats()
+    # fair-pick credit: 5 trickle + the flood picks interleaved with them
+    # (the flood's tail drains through the single-band legacy path)
+    assert stats[0]["served"] == 5 and stats[1]["served"] >= 4
+
+
+def test_band_shares_weight_the_dispatch_mix():
+    """Shares 1:3 -> under sustained two-band load, band 1 gets ~3 of every
+    4 dispatches while both bands still make progress."""
+    q = TaskQueue(backfill=True, now_fn=FakeClock(),
+                  band_shares={0: 1.0, 1: 3.0})
+    for _ in range(12):
+        q.push(_task(band=0, queued_at=0.0))
+        q.push(_task(band=1, queued_at=0.0))
+    first16 = [q.pop_fitting(lambda n: True).band for _ in range(16)]
+    assert first16.count(1) == 12 and first16.count(0) == 4
+    share = q.band_stats()[1]["share"]
+    assert abs(share - 0.75) < 1e-9
+
+
+def test_aged_task_bypasses_fair_pick():
+    """Nothing waits past aging_s: a task whose band is overserved (and
+    would lose every fair pick) pops first once its queue wait crosses the
+    aging threshold."""
+    clock = FakeClock()
+    q = TaskQueue(backfill=True, aging_s=10.0, now_fn=clock,
+                  band_shares={0: 1.0, 1: 1.0})
+    for _ in range(4):                      # overserve band 1
+        q.push(_task(band=1, queued_at=0.0))
+    for _ in range(4):
+        assert q.pop_fitting(lambda n: True).band == 1
+    clock.advance(50.0)
+    starved = _task(band=1, queued_at=0.0)      # waited 50s > aging_s
+    q.push(starved)
+    fresh = [_task(band=0, queued_at=49.0) for _ in range(3)]
+    for t in fresh:
+        q.push(t)
+    # fair order would pick band 0 (tied service, lower id) — aging wins
+    assert q.pop_fitting(lambda n: True).uid == starved.uid
+    assert q.pop_fitting(lambda n: True).band == 0
+
+
+def test_preemptible_task_unparked_by_fake_clock():
+    """The trainer-class starvation guard on the injected clock: a parked
+    preemptible task backfills past waiting design work only after its
+    fake-clock wait exceeds aging_s (the symmetric fairness case — design
+    floods cannot park the trainer forever)."""
+    clock = FakeClock()
+    q = TaskQueue(backfill=True, aging_s=5.0, now_fn=clock)
+    design = _task(n_devices=8, queued_at=0.0)          # never fits
+    trainer = _task(n_devices=1, priority=100, preemptible=True,
+                    queued_at=0.0)
+    q.push(design)
+    q.push(trainer)
+    assert q.pop_fitting(lambda n: n <= 1) is None      # parked, not aged
+    clock.advance(4.9)
+    assert q.pop_fitting(lambda n: n <= 1) is None      # still not aged
+    clock.advance(0.2)
+    got = q.pop_fitting(lambda n: n <= 1)               # aged: backfills
+    assert got is not None and got.uid == trainer.uid
+
+
+def test_single_band_with_shares_matches_legacy_order():
+    """With shares configured but only one band queued, the pick is the
+    legacy priority scan — unstaged campaigns are byte-identical."""
+    q = TaskQueue(backfill=True, now_fn=FakeClock(),
+                  band_shares={0: 1.0, 1: 2.0})
+    lo = _task(priority=5, queued_at=0.0)
+    hi = _task(priority=1, queued_at=0.0)
+    q.push(lo)
+    q.push(hi)
+    assert q.pop_fitting(lambda n: True).uid == hi.uid
+    assert q.pop_fitting(lambda n: True).uid == lo.uid
+
+
+def test_idle_band_lag_is_capped_on_return():
+    """A band returning from a long idle stretch starts at the current
+    virtual time — it gets its fair share from now on, not a monopoly to
+    repay service it never requested while empty."""
+    q = TaskQueue(backfill=True, now_fn=FakeClock(),
+                  band_shares={0: 1.0, 1: 1.0})
+    for _ in range(6):
+        q.push(_task(band=1, queued_at=0.0))
+    for _ in range(6):                    # band 1 serves alone for a while
+        q.pop_fitting(lambda n: True)
+    for _ in range(3):
+        q.push(_task(band=0, queued_at=0.0))
+        q.push(_task(band=1, queued_at=0.0))
+    picks = [q.pop_fitting(lambda n: True).band for _ in range(6)]
+    # capped lag -> alternation, not six band-0 picks in a row
+    assert picks[:2] != [0, 0]
+    assert picks.count(0) == 3 and picks.count(1) == 3
+
+
+# ---------------------------------------------------------------------------
+# stage-aware coalescing (toy kind on the real executor)
+# ---------------------------------------------------------------------------
+
+
+def _toy_rule(max_rows=8):
+    return CoalesceRule(
+        key=lambda t: t.payload["k"],
+        merge=lambda ms: {"k": ms[0].payload["k"],
+                          "ids": [m.payload["id"] for m in ms]},
+        split=lambda ms, res: [list(res["ids"]) for _ in ms],
+        rows=lambda t: 1,
+        max_rows=max_rows)
+
+
+def _toy_task(i, stage=None, band=0):
+    t = Task(kind="toy", payload={"k": 0, "id": i},
+             resources=ResourceRequest(1))
+    t.stage = stage
+    t.band = band
+    return t
+
+
+def _run_gated(tasks, staged_rules=(), kind_rule=None):
+    """Submit ``tasks`` behind a blocker holding the only device, then let
+    the executor drain them; returns {id: fused id list} per task."""
+    # one worker: the dequeue->coalesce step is serialized, so everything
+    # queued behind the blocker fuses deterministically
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=1)
+    gate = threading.Event()
+    running = threading.Event()
+
+    def blocker(sm, p):
+        running.set()
+        gate.wait(timeout=10)
+        return None
+
+    ex.register("blocker", blocker)
+    ex.register("toy", lambda sm, p: {"ids": p["ids"] if "ids" in p else [p["id"]]})
+    if kind_rule is not None:
+        ex.register_coalescable("toy", kind_rule)
+    for stage, rule in staged_rules:
+        ex.register_coalescable("toy", rule, stage=stage)
+    try:
+        ex.submit(Task(kind="blocker", payload={},
+                       resources=ResourceRequest(1)))
+        assert running.wait(timeout=10)
+        for t in tasks:                 # all queued while the device is held
+            ex.submit(t)
+        gate.set()
+        done = [ex.drain(timeout=10) for _ in range(len(tasks) + 1)]
+        out = {}
+        for d in done:
+            if d.kind == "toy":
+                # fused members get the split fan-out (a list); solo
+                # dispatches get the raw fn result (the dict)
+                ids = (d.result["ids"] if isinstance(d.result, dict)
+                       else d.result)
+                out[d.payload["id"]] = sorted(ids)
+        return out
+    finally:
+        ex.shutdown()
+
+
+def test_same_stage_tasks_fuse_cross_stage_never():
+    """One kind-wide rule: tasks sharing a stage label fuse into one
+    dispatch (regardless of pipeline/protocol), tasks of different stages
+    — or with no stage — never share one."""
+    tasks = [_toy_task(1, stage="fold"), _toy_task(2, stage="fold"),
+             _toy_task(3, stage="seqdesign"), _toy_task(4, stage=None)]
+    got = _run_gated(tasks, kind_rule=_toy_rule())
+    assert got[1] == got[2] == [1, 2]
+    assert got[3] == [3]
+    assert got[4] == [4]
+
+
+def test_stage_rule_overlay_and_fallback():
+    """A stage-keyed rule applies only to its stage; tasks of other stages
+    fall back to the kind-wide rule (here: none — they dispatch solo)."""
+    tasks = [_toy_task(1, stage="fold"), _toy_task(2, stage="fold"),
+             _toy_task(3, stage="fold"),
+             _toy_task(4, stage="other"), _toy_task(5, stage="other")]
+    got = _run_gated(tasks, staged_rules=[("fold", _toy_rule())])
+    assert got[1] == got[2] == got[3] == [1, 2, 3]
+    assert got[4] == [4] and got[5] == [5]      # no rule for their stage
+    # per-stage cap: max_rows=2 splits three fold tasks into 2+1
+    got = _run_gated([_toy_task(6, stage="fold"), _toy_task(7, stage="fold"),
+                      _toy_task(8, stage="fold")],
+                     staged_rules=[("fold", _toy_rule(max_rows=2))])
+    sizes = sorted(len(v) for v in got.values())
+    assert sizes == [1, 2, 2]
+
+
+def test_stage_report_sections():
+    """Dispatching staged tasks populates the executor's per-stage report:
+    dispatch/task/row counters, allocator grant shapes, utilization slices
+    and the queue's band accounting."""
+    tasks = [_toy_task(1, stage="fold", band=1),
+             _toy_task(2, stage="fold", band=1),
+             _toy_task(3, stage="seqdesign")]
+    for t in tasks:
+        t.resources = ResourceRequest(n_devices=1, rows=1)
+    alloc = DeviceAllocator(jax.devices())
+    ex = AsyncExecutor(alloc, max_workers=2)
+    ex.register("toy", lambda sm, p: {"ids": p["ids"] if "ids" in p else [p["id"]]})
+    ex.register_coalescable("toy", _toy_rule())
+    try:
+        for t in tasks:
+            ex.submit(t)
+        for _ in range(3):
+            ex.drain(timeout=10)
+        rep = ex.stage_report()
+    finally:
+        ex.shutdown()
+    assert set(rep) >= {"fold", "seqdesign"}
+    assert rep["fold"]["tasks"] == 2
+    assert rep["seqdesign"]["tasks"] == 1
+    assert rep["fold"]["grants"]["grants"] >= 1
+    assert 0.0 <= rep["fold"]["utilization"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# the staged binder protocol (unit level)
+# ---------------------------------------------------------------------------
+
+
+def test_stage_table_validation():
+    with pytest.raises(ValueError):
+        StagedBinderProtocol(BinderConfig(stages=(
+            StageSpec(name="a", kind="backbone_batch"),
+            StageSpec(name="b", kind="generate_batch"),
+            StageSpec(name="c", kind="generate_batch"))))
+    proto = StagedBinderProtocol(BinderConfig())
+    assert [s.name for s in proto.stage_specs()] == [
+        "backbone", "seqdesign", "fold"]
+
+
+def test_stage_table_stamps_tasks():
+    """Tasks carry their stage's label, band, namespace, and row footprint
+    — the whole runtime contract rides on the task, so the coordinator
+    needs zero stage knowledge."""
+    stages = (
+        StageSpec(name="bb", kind="backbone_batch", band=2, n_devices=2),
+        StageSpec(name="design", kind="generate_batch", params="binder"),
+        StageSpec(name="score", kind="predict_batch", params="multimer",
+                  band=1),
+    )
+    proto = StagedBinderProtocol(BinderConfig(stages=stages, score_batch=2))
+    rng = np.random.default_rng(0)
+    pl = proto.new_pipeline("p0", rng.normal(size=(30, 16)),
+                            rng.normal(size=(16,)), 24)
+    t = proto.first_task(pl)
+    assert (t.kind, t.stage, t.band) == ("backbone_batch", "bb", 2)
+    assert t.resources.n_devices == 2 and t.resources.rows == 1
+    assert "params" not in t.payload            # default namespace
+    cands = np.stack([rng.normal(size=(30, 16)) for _ in range(4)])
+    d = proto.handlers["backbone_batch"](
+        pl, {"rows": [(cands, np.array([0.1, 0.9, 0.2, 0.0]))]})
+    (gen,) = d.tasks
+    assert (gen.kind, gen.stage, gen.payload["params"]) == (
+        "generate_batch", "design", "binder")
+    np.testing.assert_allclose(pl.meta["backbone"], cands[1])
+    seqs = rng.integers(1, 21, size=(4, 24)).astype(np.int32)
+    d = proto.handlers["generate_batch"](
+        pl, {"rows": [(seqs, np.array([0.5, 2.0, 1.0, 0.1], np.float32))]})
+    (fold,) = d.tasks
+    assert (fold.kind, fold.stage, fold.band) == ("predict_batch", "score", 1)
+    assert fold.payload["params"] == "multimer"
+    assert fold.resources.rows == 2             # score_batch top-k
+    # candidates were ranked by LL: row 0 of the stack is the LL=2.0 seq
+    np.testing.assert_array_equal(
+        fold.payload["sequences"][0][:24], seqs[1])
+
+
+def test_seed_independent_of_global_uid_counter():
+    """Sampling seeds derive from the protocol's own creation counter, not
+    the global pipeline uid — creating unrelated pipelines first must not
+    shift a binder pipeline's stream (composition independence)."""
+    rng = np.random.default_rng(0)
+    bb, tgt = rng.normal(size=(30, 16)), rng.normal(size=(16,))
+
+    def first_seed(burn_uids):
+        for _ in range(burn_uids):      # advance the global uid counter
+            Task(kind="x", payload={})
+        proto = StagedBinderProtocol(BinderConfig(seed=3))
+        pl = proto.new_pipeline("p", bb, tgt, 24)
+        return proto.first_task(pl).payload["seeds"][0]
+
+    assert first_seed(0) == first_seed(17)
+
+
+# ---------------------------------------------------------------------------
+# staged campaigns end-to-end (the acceptance path)
+# ---------------------------------------------------------------------------
+
+BINDER = ProtocolSpec(kind="binder", n_cycles=2, n_candidates=4,
+                      score_batch=2)
+RESCORE = ProtocolSpec(kind="rescore", n_cycles=2, score_batch=4)
+
+
+@pytest.fixture(scope="module")
+def shared_payload():
+    """One reduced payload (and compiled-fn cache) for every campaign in
+    this module; namespaces created by one campaign are identical objects
+    across campaigns, which is exactly the determinism the composition
+    tests assert."""
+    from repro.core import ProteinPayload
+    return ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=24)
+
+
+def _campaign(protocols, payload, **kw):
+    spec = CampaignSpec(structures=2, receptor_len=24, protocols=protocols,
+                        seed=0, reduced=True, **kw)
+    with ImpressSession(spec, payload=payload) as s:
+        rep = s.run(timeout=300)
+        hist = {p.name: [(h["cycle"], round(h["fitness"], 9), h["sequence"])
+                         for h in p.history if "sequence" in h]
+                for p in s.coordinator.pipelines.values()}
+        return rep, hist, s
+
+
+def test_staged_campaign_via_campaign_spec_stages(shared_payload):
+    """The acceptance path: a three-stage binder campaign declared through
+    ``CampaignSpec.stages`` (dict entries), running backbone -> seqdesign
+    -> fold through the unmodified coordinator, with two extra param-set
+    namespaces and per-stage report sections."""
+    stages = ({"name": "bb", "kind": "backbone_batch"},
+              {"name": "design", "kind": "generate_batch",
+               "params": "binder"},
+              {"name": "score", "kind": "predict_batch",
+               "params": "multimer", "band": 1})
+    rep, hist, s = _campaign((BINDER,), shared_payload, stages=stages)
+    assert all(len(h) == 2 for h in hist.values())     # n_cycles accepted
+    st = rep["stages"]
+    assert {"bb", "design", "score", "__bands__"} <= set(st)
+    for name in ("bb", "design", "score"):
+        assert st[name]["tasks"] >= 2
+        assert 0.0 <= st[name]["utilization"] <= 1.0
+        assert st[name]["grants"]["grants"] >= 1
+    # two param-set namespaces beyond the defaults, on the one payload
+    assert "binder" in s.payload.gen_stores
+    assert "multimer" in s.payload.fold_sets
+    assert s.payload.fold_sets["multimer"][0].name == "foldscore-m"
+
+
+def test_binder_composition_independent_of_coalescing(shared_payload):
+    """coalesce=True vs coalesce=False: identical accepted designs — fused
+    multi-pipeline stage batches are bit-identical to solo dispatches."""
+    _, fused, _ = _campaign((BINDER,), shared_payload, coalesce=True)
+    _, solo, _ = _campaign((BINDER,), shared_payload, coalesce=False)
+    assert fused == solo and fused
+
+
+def test_binder_composition_independent_of_cotenants(shared_payload):
+    """A binder campaign's designs are identical whether it runs alone or
+    fused with a rescore co-tenant flooding its fold stage — and the fold
+    stage really is shared (fewer dispatches than tasks)."""
+    _, solo, _ = _campaign((BINDER,), shared_payload)
+    rep, fused, _ = _campaign((BINDER, RESCORE), shared_payload)
+    assert {f"binder/{k}": v for k, v in solo.items()} == {
+        k: v for k, v in fused.items() if k.startswith("binder/")}
+    fold = rep["stages"]["fold"]
+    assert fold["tasks"] > fold["dispatches"]   # cross-protocol fusion
+    assert rep["protocols"]["rescore"]["n_pipelines"] == 2

@@ -37,12 +37,13 @@ ARCH_SECTIONS = [
     "Length bucketing & masking",
     "Decode kernel & paged KV cache",
     "Model evolution",
+    "Heterogeneous stages & fair scheduling",
     "Adding a new task kind",
 ]
 
 # campaign-API modules every doc must reference by name: the facade and
 # the DesignProtocol interface are the public surface of the repo
-API_MODULES = ["session.py", "core/api.py"]
+API_MODULES = ["session.py", "core/api.py", "core/stages.py"]
 
 
 def repro_packages():
