@@ -48,7 +48,8 @@ MODES = ("per-candidate", "batched", "coalesced")
 MIXED_MODES = ("fragmented", "fused")
 
 
-def run_mode(payload, mode, *, n_pipelines, n_cand, length, split):
+def run_mode(payload, mode, *, n_pipelines, n_cand, length, split,
+             trace=False):
     """Score n_pipelines × n_cand candidates through the executor; returns
     (seconds, coalesce stats). A blocker task holds the device while the
     scoring tasks queue up, so the coalesced mode has a backlog to fuse —
@@ -57,10 +58,13 @@ def run_mode(payload, mode, *, n_pipelines, n_cand, length, split):
     The session facade does the wiring (allocator/executor/payload
     registry — the shared ``payload`` keeps one compile cache across
     modes); raw tasks are then submitted directly, bypassing any protocol.
+    ``trace=True`` enables span tracing (the telemetry-overhead probe; no
+    trace file is written since ``run()`` is never called here).
     """
     sess = ImpressSession(
         CampaignSpec(protocols=(), receptor_len=length, max_workers=4,
-                     coalesce=False),
+                     coalesce=False,
+                     trace_dir="unused-trace-probe" if trace else None),
         payload=payload)
     ex = sess.executor
     if mode == "coalesced":
@@ -143,6 +147,23 @@ def run_mixed_mode(payload, mode, *, n_pipelines, n_cand, lengths, buckets):
                               for b in batch_log[log_start:]]
     sess.shutdown()
     return dt, stats
+
+
+def measure_telemetry_overhead(args, payload):
+    """Traced vs untraced wall time on the same coalesced-scoring workload:
+    the fractional cost of leaving span tracing on. Expected well under a
+    few percent — every span call is a dict append next to a jitted device
+    dispatch. The probe scales the backlog up (×4 pipelines) and
+    interleaves best-of-pairs so scheduler jitter, which dwarfs the
+    tracing cost on millisecond workloads, mostly cancels."""
+    kw = dict(n_pipelines=4 * args.pipelines, n_cand=args.n_candidates,
+              length=args.length, split=max(1, args.length - 4))
+    run_mode(payload, "coalesced", **kw)          # warmup: compile cache
+    offs, ons = [], []
+    for _ in range(max(3, args.repeats)):
+        offs.append(run_mode(payload, "coalesced", **kw)[0])
+        ons.append(run_mode(payload, "coalesced", trace=True, **kw)[0])
+    return (min(ons) - min(offs)) / min(offs)
 
 
 def run_mixed(args, payload, record):
@@ -271,11 +292,15 @@ def main(emit=print, argv=None):
     print(f"# batched vs per-candidate at n_candidates={n_cand}: "
           f"{speedup:.2f}x {'(>= 3x target met)' if speedup >= 3 else ''}")
     if args.json:
+        overhead = measure_telemetry_overhead(args, payload)
+        print(f"# telemetry_overhead (tracing on vs off): "
+              f"{100 * overhead:+.1f}%")
         record.update({
             "candidates_per_sec": {m: results[m][0] for m in MODES},
             "speedup_vs_per_candidate": {
                 m: results[m][0] / base for m in MODES},
             "occupancy": occupancy,
+            "telemetry_overhead": overhead,
         })
         write_bench_json(args.json, record)
     return speedup

@@ -164,6 +164,12 @@ class Coordinator:
                 b.inflight += 1
                 self._inflight += 1
                 self.executor.submit(task)
+                if task.trace is not None:
+                    # span tracing on: tag the record with the protocol
+                    # binding that routed the task, so the Perfetto export
+                    # can draw per-protocol tracks (multi-tenant
+                    # attribution of coalesced rows)
+                    task.trace["protocol"] = b.name
 
     # -- sub-pipelines -------------------------------------------------------
 
@@ -387,6 +393,11 @@ class Coordinator:
             "stages": (self.executor.stage_report()
                        if hasattr(self.executor, "stage_report") else {}),
             "quality_by_version": self._quality_by_version(pls),
+            # per-kind queue-wait/device-time quantiles, task counters, and
+            # span tallies from the unified telemetry layer (obs/)
+            "telemetry": (self.executor.telemetry_summary()
+                          if hasattr(self.executor, "telemetry_summary")
+                          else {}),
             "evolution": (None if self.trainer is None else
                           self.trainer.report(
                               makespan=makespan,

@@ -69,10 +69,19 @@ class Task:
     #   versa) beyond its share. Band 0 with no shares = plain FIFO
     preempt_requested: bool = False  # cooperative yield signal: the payload
     #   fn checks this between steps and returns early with resume state
+    trace: Optional[Dict[str, Any]] = None  # lifecycle trace record, owned
+    #   by the executor's ``obs.Tracer`` when span tracing is on: event
+    #   chain, fused-dispatch links, protocol binding — see obs/trace.py.
+    #   None (tracing off) costs nothing anywhere
 
-    def set_state(self, state: TaskState):
+    def set_state(self, state: TaskState, now: Optional[float] = None):
+        """Transition and stamp. ``now`` lets clock-owning callers (the
+        executor's injectable ``now_fn``) keep task timestamps on the same
+        timebase as queue fairness and span traces — and makes wait/run
+        timing tests deterministic under a fake clock."""
         self.state = state
-        self.timestamps[state.value] = time.monotonic()
+        self.timestamps[state.value] = (time.monotonic() if now is None
+                                        else now)
 
     def duration(self) -> Optional[float]:
         a = self.timestamps.get("RUNNING")

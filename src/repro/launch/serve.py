@@ -68,18 +68,40 @@ def serve_batch(cfg, *, batch, prompt_len, gen, temperature=0.0, seed=0):
 
 
 def serve_campaign(*, protocols, structures, cycles, candidates,
-                   receptor_len, evolution, timeout=600.0):
+                   receptor_len, evolution, timeout=600.0, trace_dir=None,
+                   metrics_every=0.0):
     """Run a design campaign through the session facade and return its
-    versioned report."""
+    versioned report. ``trace_dir`` enables span tracing (Perfetto JSON +
+    metrics snapshot written there); ``metrics_every`` > 0 prints a live
+    metrics snapshot line every that-many seconds while the campaign runs."""
+    import threading
+
     from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
     spec = CampaignSpec(
         structures=structures, receptor_len=receptor_len,
         protocols=tuple(ProtocolSpec(kind, n_candidates=candidates,
                                      n_cycles=cycles)
                         for kind in protocols),
-        evolution=evolution, timeout=timeout)
+        evolution=evolution, timeout=timeout, trace_dir=trace_dir)
     with ImpressSession(spec) as session:
-        return session.run()
+        stop = threading.Event()
+        if metrics_every > 0:
+            def _live():
+                while not stop.wait(metrics_every):
+                    snap = session.metrics_snapshot()
+                    done = sum(v for k, v in snap.items()
+                               if k.startswith("tasks.completed"))
+                    depth = sum(v for k, v in snap.items()
+                                if k.startswith("queue.depth"))
+                    free = snap.get("devices.free", 0)
+                    print(f"[serve] live: {int(done)} tasks done, "
+                          f"queue depth {int(depth)}, "
+                          f"{int(free)} devices free", flush=True)
+            threading.Thread(target=_live, daemon=True).start()
+        try:
+            return session.run()
+        finally:
+            stop.set()
 
 
 def main():
@@ -98,13 +120,21 @@ def main():
     ap.add_argument("--receptor-len", type=int, default=20)
     ap.add_argument("--evolution", action="store_true",
                     help="campaign mode: online model evolution (§V)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="campaign mode: enable span tracing and write "
+                         "Perfetto trace.json + metrics.json here")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="campaign mode: print a live metrics snapshot "
+                         "every N seconds while the campaign runs")
     args = ap.parse_args()
     if args.campaign:
         rep = serve_campaign(protocols=args.campaign.split(","),
                              structures=args.structures, cycles=args.cycles,
                              candidates=args.candidates,
                              receptor_len=args.receptor_len,
-                             evolution=args.evolution)
+                             evolution=args.evolution,
+                             trace_dir=args.trace_dir,
+                             metrics_every=args.metrics_every)
         print(f"[serve] campaign schema v{rep.schema_version}: "
               f"{rep.trajectories} trajectories in {rep.makespan_s:.1f}s, "
               f"utilization {100 * rep.utilization:.0f}%")
@@ -112,6 +142,10 @@ def main():
             print(f"[serve]   {name}: {p['n_pipelines']} pipelines "
                   f"(+{p['n_sub_pipelines']} subs), "
                   f"{p['trajectories']} trajectories")
+        tel = rep.raw.get("telemetry", {})
+        if tel.get("trace_path"):
+            print(f"[serve] trace: {tel['trace_path']} "
+                  f"(load in ui.perfetto.dev)")
         return
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     r = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,

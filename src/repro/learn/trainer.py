@@ -51,6 +51,7 @@ class TrainerService:
         self._inflight: Optional[int] = None   # uid of the running task
         self._cur_payload: Optional[dict] = None
         self._resume: Optional[dict] = None    # resume state from preemption
+        self._preempted_uid: Optional[int] = None  # uid the resume links to
         self._accepted_since = 0
         self.history: List[dict] = []          # one record per finetune
         self.submitted = 0
@@ -114,7 +115,12 @@ class TrainerService:
                     preemptible=True, resources=ResourceRequest(n_devices=n))
         self._inflight = task.uid
         self.submitted += 1
+        resuming = self._resume is not None
         self.executor.submit(task)
+        if resuming and task.trace is not None:
+            # span tracing on: link the continuation to the preempted task
+            # it resumes, so the preempt/resume chain is walkable in traces
+            task.trace["resumed_from"] = self._preempted_uid
         return task
 
     def on_complete(self, task: Task):
@@ -134,6 +140,10 @@ class TrainerService:
         if r.get("preempted"):
             self.preempted += 1
             self._resume = r["resume"]
+            self._preempted_uid = task.uid
+            self.executor.telemetry.tracer.mark(task, "preempted")
+            self.executor.telemetry.metrics.counter(
+                "tasks.preempted", kind=task.kind).inc()
             return
         self.completed += 1
         self._resume = None

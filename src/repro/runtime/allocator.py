@@ -20,12 +20,13 @@ from __future__ import annotations
 
 import itertools
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 from jax.sharding import Mesh
+
+from repro.obs import Telemetry
 
 _uid = itertools.count()
 
@@ -119,7 +120,8 @@ def _block_shapes(n: int, grid: Tuple[int, ...]):
 
 class DeviceAllocator:
     def __init__(self, devices, grid_shape: Optional[Tuple[int, ...]] = None,
-                 axis_names: Tuple[str, ...] = ("sub",)):
+                 axis_names: Tuple[str, ...] = ("sub",),
+                 telemetry: Optional[Telemetry] = None):
         devices = np.asarray(devices, dtype=object)
         if grid_shape is not None:
             devices = devices.reshape(grid_shape)
@@ -131,12 +133,18 @@ class DeviceAllocator:
         self.axis_names = axis_names
         self.allocations: Dict[int, SubMesh] = {}
         self._lock = threading.Lock()
-        self._t0 = time.monotonic()
+        # shared observability bundle: the metrics registry carries the
+        # row-proportional grant counters (shape_stats), the tracer records
+        # grant spans (device-track timelines), and its clock keys every
+        # busy-log interval — same timebase as the executor's spans
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.now = self.telemetry.now
+        self._t0 = self.now()
         # (start, end, ndev, stage) — stage is the pipeline stage the grant
         # served (None for unstaged tasks), feeding per-stage utilization
         self._busy_log: List[Tuple[float, float, int, Optional[str]]] = []
         self._open: Dict[int, Tuple[float, int, Optional[str]]] = {}
-        self._shape_log: List[dict] = []  # row-proportional grant records
+        self.telemetry.metrics.gauge("devices.free").set(self.n_free)
 
     # -- carving ---------------------------------------------------------
 
@@ -168,8 +176,12 @@ class DeviceAllocator:
                 sub = SubMesh(devices=devs, mesh=Mesh(devs, names),
                               origin=tuple(origin), shape=tuple(shape))
                 self.allocations[sub.uid] = sub
-                self._open[sub.uid] = (time.monotonic(), sub.n_devices,
-                                       stage)
+                self._open[sub.uid] = (self.now(), sub.n_devices, stage)
+                flat = np.arange(self.grid.size).reshape(
+                    self.grid.shape)[sl].ravel().tolist()
+                self.telemetry.tracer.grant_begin(sub, stage, flat)
+                self.telemetry.metrics.gauge("devices.free").set(
+                    int(self.free.sum()))
                 return sub
             return None
 
@@ -181,7 +193,10 @@ class DeviceAllocator:
             self.free[sl] = ~self.dead[sl]
             del self.allocations[sub.uid]
             start, ndev, stage = self._open.pop(sub.uid)
-            self._busy_log.append((start, time.monotonic(), ndev, stage))
+            self._busy_log.append((start, self.now(), ndev, stage))
+            self.telemetry.metrics.gauge("devices.free").set(
+                int(self.free.sum()))
+        self.telemetry.tracer.grant_end(sub)
 
     # -- batch-aware shapes ------------------------------------------------
 
@@ -209,27 +224,35 @@ class DeviceAllocator:
         while True:
             sub = self.request(n, stage=stage)
             if sub is not None:
-                self._shape_log.append({
-                    "rows": int(rows),
-                    "bucket": bucket_rows(max(1, int(rows))),
-                    "want": want, "granted": n, "shape": sub.shape,
-                    "stage": stage})
+                m = self.telemetry.metrics
+                m.counter("alloc.grants").inc()
+                m.counter("alloc.granted_devices").inc(n)
+                m.counter("alloc.rows_per_device").inc(int(rows) / n)
+                if n < want:
+                    m.counter("alloc.downsized").inc()
+                m.histogram("alloc.grant_devices").observe(n)
+                if stage is not None:
+                    m.counter("alloc.stage_grants", stage=stage).inc()
+                    m.counter("alloc.stage_devices", stage=stage).inc(n)
+                    m.counter("alloc.stage_rows", stage=stage).inc(int(rows))
                 return sub
             if n <= floor:
                 return None
             n = max(int(floor), n // 2)
 
     def shape_stats(self) -> dict:
-        """Summary of row-proportional grants (coordinator report)."""
-        log = list(self._shape_log)
+        """Summary of row-proportional grants (coordinator report),
+        rebuilt from the registry's ``alloc.*`` counters — same schema as
+        the shape log it replaced."""
+        m = self.telemetry.metrics
+        n = m.value("alloc.grants")
         return {
-            "grants": len(log),
-            "mean_granted": (sum(e["granted"] for e in log) / len(log)
-                             if log else 0.0),
+            "grants": int(n),
+            "mean_granted": m.value("alloc.granted_devices") / n if n
+            else 0.0,
             "mean_rows_per_device": (
-                sum(e["rows"] / e["granted"] for e in log) / len(log)
-                if log else 0.0),
-            "downsized": sum(1 for e in log if e["granted"] < e["want"]),
+                m.value("alloc.rows_per_device") / n if n else 0.0),
+            "downsized": int(m.value("alloc.downsized")),
         }
 
     def stage_shape_stats(self) -> Dict[str, dict]:
@@ -237,15 +260,15 @@ class DeviceAllocator:
         stage drew, their mean size, and mean rows per device — the shape
         evidence that heterogeneous stages really got heterogeneous
         allocations. Grants without a stage key are omitted."""
+        m = self.telemetry.metrics
         out: Dict[str, dict] = {}
-        for e in list(self._shape_log):
-            if e.get("stage") is None:
-                continue
-            s = out.setdefault(e["stage"], {"grants": 0, "devices": 0,
-                                            "rows": 0})
-            s["grants"] += 1
-            s["devices"] += e["granted"]
-            s["rows"] += e["rows"]
+        for stage, c in m.labeled("alloc.stage_grants", "stage").items():
+            devices = int(m.value("alloc.stage_devices", stage=stage))
+            out[stage] = {
+                "grants": int(c.get()),
+                "devices": devices,
+                "rows": int(m.value("alloc.stage_rows", stage=stage)),
+            }
         for s in out.values():
             s["mean_granted"] = s["devices"] / s["grants"]
             s["mean_rows_per_device"] = s["rows"] / max(s["devices"], 1)
@@ -256,7 +279,7 @@ class DeviceAllocator:
         """Busy device-seconds per stage / (devices × wall-clock) — the
         per-stage slice of ``utilization``. Unstaged grants land under the
         ``None`` key so the slices still sum to the total."""
-        now = until or time.monotonic()
+        now = until or self.now()
         busy: Dict[Optional[str], float] = {}
         for s, e, n, st in list(self._busy_log):
             busy[st] = busy.get(st, 0.0) + (min(e, now) - s) * n
@@ -281,6 +304,8 @@ class DeviceAllocator:
                 return []
             self.dead[pos] = True
             self.free[pos] = False
+            self.telemetry.metrics.gauge("devices.free").set(
+                int(self.free.sum()))
             hit = []
             for sub in list(self.allocations.values()):
                 sl = tuple(slice(o, o + s)
@@ -316,7 +341,7 @@ class DeviceAllocator:
 
     def utilization(self, until: Optional[float] = None) -> float:
         """Busy device-seconds / (devices × wall-clock) since construction."""
-        now = until or time.monotonic()
+        now = until or self.now()
         busy = sum((min(e, now) - s) * n for s, e, n, _ in self._busy_log)
         with self._lock:
             busy += sum((now - s) * n for s, n, _ in self._open.values())
@@ -325,7 +350,7 @@ class DeviceAllocator:
 
     def busy_timeline(self, resolution: float = 0.05):
         """(times, busy_devices) series for utilization plots (Fig. 4/5)."""
-        now = time.monotonic()
+        now = self.now()
         events = [(s, e, n) for s, e, n, _ in self._busy_log] + [
             (s, now, n) for s, n, _ in self._open.values()]
         if not events:

@@ -57,6 +57,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.pipeline import TERMINAL, Task, TaskState
+from repro.obs import Telemetry
 from repro.runtime.allocator import DeviceAllocator, SubMesh
 from repro.runtime.scheduler import TaskQueue
 
@@ -99,11 +100,13 @@ class AdmissionPort:
     port admits nothing; the port is inert."""
 
     def __init__(self, executor: "AsyncExecutor", rule: CoalesceRule,
-                 leader: Task, sub: SubMesh, budget: int):
+                 leader: Task, sub: SubMesh, budget: int,
+                 dispatch_span: Optional[dict] = None):
         self._ex = executor
         self._rule = rule
         self._pred = executor._compatible_with(leader, rule)
         self._sub = sub
+        self._span = dispatch_span    # fused-batch trace span to link into
         self.budget = int(budget)
         self.admitted: List[Task] = []
         self._lock = threading.Lock()
@@ -121,10 +124,15 @@ class AdmissionPort:
             if not taken:
                 return []
             self._ex._track(taken, self._sub)
+            tel = self._ex.telemetry
+            tel.tracer.dispatch_admit(self._span, taken)
+            now = self._ex.now()
             for m in taken:
-                m.set_state(TaskState.SCHEDULED)
-                m.set_state(TaskState.EXEC_SETUP)
-                m.set_state(TaskState.RUNNING)
+                m.set_state(TaskState.SCHEDULED, now)
+                m.set_state(TaskState.EXEC_SETUP, now)
+                m.set_state(TaskState.RUNNING, now)
+            tel.tracer.mark_all(taken, "dispatched")
+            tel.metrics.counter("admission.live_tasks").inc(len(taken))
             self.admitted.extend(taken)
             self.budget -= sum(self._rule.rows(m) for m in taken)
             return list(taken)
@@ -136,10 +144,24 @@ class AsyncExecutor:
                  straggler_factor: Optional[float] = None,
                  min_straggler_samples: int = 3, aging_s: float = 60.0,
                  band_shares: Optional[Dict[int, float]] = None,
-                 now_fn: Optional[Callable[[], float]] = None):
+                 now_fn: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.allocator = allocator
+        # one observability bundle (metrics registry + span tracer + clock)
+        # per executor: sessions inject a shared instance so allocator
+        # grants and task spans land on the same registry and timebase; a
+        # bare executor adopts the allocator's bundle (tracer disabled by
+        # default), unless a custom clock forces a fresh one
+        if telemetry is not None:
+            self.telemetry = telemetry
+        elif now_fn is not None:
+            self.telemetry = Telemetry(now_fn=now_fn)
+        else:
+            self.telemetry = allocator.telemetry
+        self.now = now_fn if now_fn is not None else self.telemetry.now
         self.queue = TaskQueue(backfill=backfill, aging_s=aging_s,
-                               now_fn=now_fn, band_shares=band_shares)
+                               now_fn=self.now, band_shares=band_shares,
+                               metrics=self.telemetry.metrics)
         self.completions: "queue.Queue[Task]" = queue.Queue()
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
@@ -150,8 +172,6 @@ class AsyncExecutor:
         # carry that stage tag — different stages of one kind can fuse with
         # different shape keys / row caps
         self._coalesce_staged: Dict[Tuple[str, str], CoalesceRule] = {}
-        self._coalesce_log: List[Tuple[int, int]] = []  # (n_tasks, n_rows)
-        self._stage_log: Dict[str, dict] = {}  # per-stage dispatch stats
         self._tasks: Dict[int, Task] = {}
         self._durations: Dict[str, List[float]] = {}
         self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
@@ -199,7 +219,11 @@ class AsyncExecutor:
     def submit(self, task: Task):
         with self._lock:
             self._tasks[task.uid] = task
-        task.set_state(TaskState.QUEUED)
+        tel = self.telemetry
+        tel.tracer.task_submitted(task)
+        tel.metrics.counter("tasks.submitted", kind=task.kind).inc()
+        task.set_state(TaskState.QUEUED, self.now())
+        tel.tracer.mark(task, "queued")
         self.queue.push(task)
         self._wake.set()
         # a design task that cannot fit right now must not wait out running
@@ -213,7 +237,8 @@ class AsyncExecutor:
         t = self.queue.remove(uid)
         if t is not None:
             t.canceled = True
-            t.set_state(TaskState.CANCELED)
+            t.set_state(TaskState.CANCELED, self.now())
+            self.telemetry.tracer.mark(t, "canceled")
             self.completions.put(t)
             return
         with self._lock:
@@ -269,10 +294,11 @@ class AsyncExecutor:
         the queue — during an admission window too — so ``cancel`` and
         ``inject_device_failure`` can reach a dispatch while it is still
         being assembled (the worker loop later refreshes the timestamps)."""
-        now = time.monotonic()
+        now = self.now()
         with self._lock:
             for m in members:
                 self._running[m.uid] = (m, sub, now)
+        self.telemetry.tracer.mark_all(members, "granted")
 
     def _coalesce_members(self, task: Task, sub: SubMesh):
         """Drain queued tasks compatible with ``task`` into one dispatch.
@@ -295,19 +321,30 @@ class AsyncExecutor:
             budget -= sum(rule.rows(m) for m in taken)
         # rolling admission: hold the dispatch open so compatible tasks
         # queued by other pipelines *after* this dequeue still join
+        metrics = self.telemetry.metrics
         if rule.admission_window > 0 and budget > 0:
-            deadline = time.monotonic() + rule.admission_window
-            while (budget > 0 and time.monotonic() < deadline
+            deadline = self.now() + rule.admission_window
+            n_late = 0
+            while (budget > 0 and self.now() < deadline
                    and not self._stop.is_set()):
                 time.sleep(min(0.002, rule.admission_window))
                 late = self.queue.pop_matching(pred, rows=rule.rows,
                                                budget=budget)
                 self._track(late, sub)
                 members += late
+                n_late += len(late)
                 budget -= sum(rule.rows(m) for m in late)
+            metrics.counter("admission.late_tasks").inc(n_late)
+            metrics.histogram("admission.occupancy").observe(
+                (rule.max_rows - budget) / max(rule.max_rows, 1))
         payload = rule.merge(members) if len(members) > 1 else task.payload
-        self._coalesce_log.append(
-            (len(members), sum(rule.rows(m) for m in members)))
+        rows = sum(rule.rows(m) for m in members)
+        metrics.counter("coalesce.dispatches").inc()
+        metrics.counter("coalesce.tasks").inc(len(members))
+        metrics.counter("coalesce.rows").inc(rows)
+        if len(members) > 1:
+            metrics.counter("coalesce.fused_dispatches").inc()
+            metrics.counter("coalesce.tasks_fused").inc(len(members))
         return members, payload
 
     def _maybe_regrow(self, task: Task, sub: SubMesh,
@@ -369,31 +406,37 @@ class AsyncExecutor:
             members, payload = self._coalesce_members(task, sub)
             sub = self._maybe_regrow(task, sub, members)
             rule = self._rule_for(task)
+            tel = self.telemetry
+            span = tel.tracer.dispatch_begin(task, members, sub)
             port = None
             if rule is not None and rule.live and task.retries == 0:
                 # continuous batching: the payload fn can pull compatible
                 # queued tasks into the running dispatch via this port
                 port = AdmissionPort(
                     self, rule, task, sub,
-                    rule.max_rows - sum(rule.rows(m) for m in members))
+                    rule.max_rows - sum(rule.rows(m) for m in members),
+                    dispatch_span=span)
                 payload = dict(payload, _admit=port)
             if task.preemptible:
                 # hand the payload fn its live task so it can observe
                 # preempt_requested/canceled between steps
                 payload = dict(payload, _task=task)
-            t0 = time.monotonic()
+            t0 = self.now()
             for m in members:
-                m.set_state(TaskState.SCHEDULED)
+                m.set_state(TaskState.SCHEDULED, t0)
             with self._lock:
                 for m in members:
                     self._running[m.uid] = (m, sub, t0)
             finished: List[Task] = []
             try:
+                now = self.now()
                 for m in members:
-                    m.set_state(TaskState.EXEC_SETUP)
+                    m.set_state(TaskState.EXEC_SETUP, now)
                 fn = self._fns[task.kind]
+                now = self.now()
                 for m in members:
-                    m.set_state(TaskState.RUNNING)
+                    m.set_state(TaskState.RUNNING, now)
+                tel.tracer.mark_all(members, "dispatched")
                 result = fn(sub, payload)
                 if port is not None and port.admitted:
                     # live-admitted rows follow the initial members' rows
@@ -401,16 +444,25 @@ class AsyncExecutor:
                     members = members + port.admitted
                 results = (rule.split(members, result)
                            if len(members) > 1 else [result])
+                now = self.now()
                 for m, r in zip(members, results):
                     if m.canceled:
-                        m.set_state(TaskState.CANCELED)
+                        m.set_state(TaskState.CANCELED, now)
+                        tel.tracer.mark(m, "canceled")
+                        tel.metrics.counter("tasks.canceled",
+                                            kind=m.kind).inc()
                     else:
                         m.result = r
-                        m.set_state(TaskState.DONE)
+                        m.set_state(TaskState.DONE, now)
+                        tel.tracer.mark(m, "completed")
+                        self._observe_done(m)
                         d = m.duration()
                         if d is not None:
                             self._durations.setdefault(m.kind, []).append(d)
                     finished.append(m)
+                tel.tracer.dispatch_end(
+                    span, "ok", rows=(sum(rule.rows(m) for m in members)
+                                      if rule is not None else len(members)))
                 self._record_stage(task, members, rule)
             except Exception as e:  # noqa: BLE001 — any payload failure
                 if port is not None and port.admitted \
@@ -418,20 +470,32 @@ class AsyncExecutor:
                     members = members + port.admitted  # retry them too
                 err = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
                 retried: List[Task] = []
+                now = self.now()
                 for m in members:
                     m.error = err
                     if m.retries < self.max_retries and not m.canceled:
                         m.retries += 1
                         retried.append(m)
                     else:
-                        m.set_state(TaskState.FAILED)
+                        m.set_state(TaskState.FAILED, now)
+                        tel.tracer.mark(m, "failed")
+                        tel.metrics.counter("tasks.failed",
+                                            kind=m.kind).inc()
                         finished.append(m)
+                tel.tracer.dispatch_end(
+                    span, "failed",
+                    rows=(sum(rule.rows(m) for m in members)
+                          if rule is not None else len(members)))
                 with self._lock:
                     for m in members:
                         self._running.pop(m.uid, None)
                 self.allocator.release(sub)
+                now = self.now()
                 for m in retried:  # retry members independently (re-fusable)
-                    m.set_state(TaskState.QUEUED)
+                    tel.tracer.mark(m, "retried")
+                    tel.metrics.counter("tasks.retried", kind=m.kind).inc()
+                    m.set_state(TaskState.QUEUED, now)
+                    tel.tracer.mark(m, "queued")
                     self.queue.push(m)
                 self._wake.set()
                 for m in finished:
@@ -445,6 +509,21 @@ class AsyncExecutor:
             for m in finished:
                 self.completions.put(m)
 
+    def _observe_done(self, m: Task):
+        """Per-kind completion series: queue wait (RUNNING − QUEUED) and
+        device time, as streaming histograms — the p50/p95 behind
+        ``report()["telemetry"]``."""
+        metrics = self.telemetry.metrics
+        metrics.counter("tasks.completed", kind=m.kind).inc()
+        q = m.timestamps.get("QUEUED")
+        r = m.timestamps.get("RUNNING")
+        if q is not None and r is not None:
+            metrics.histogram("task.queue_wait_s", kind=m.kind).observe(
+                max(0.0, r - q))
+        d = m.duration()
+        if d is not None:
+            metrics.histogram("task.device_s", kind=m.kind).observe(d)
+
     def _record_stage(self, task: Task, members: List[Task],
                       rule: Optional[CoalesceRule]):
         """Per-stage dispatch accounting (completed dispatches only):
@@ -453,29 +532,31 @@ class AsyncExecutor:
         of the stage report (the allocator holds grant shapes/util)."""
         if task.stage is None:
             return
-        with self._lock:
-            s = self._stage_log.setdefault(task.stage, {
-                "dispatches": 0, "tasks": 0, "rows": 0,
-                "run_s": 0.0, "wait_s": 0.0})
-            s["dispatches"] += 1
-            s["tasks"] += len(members)
-            s["rows"] += (sum(rule.rows(m) for m in members)
-                          if rule is not None else len(members))
-            for m in members:
-                d = m.duration()
-                if d is not None:
-                    s["run_s"] += d
-                q = m.timestamps.get("QUEUED")
-                r = m.timestamps.get("RUNNING")
-                if q is not None and r is not None:
-                    s["wait_s"] += max(0.0, r - q)
+        metrics = self.telemetry.metrics
+        stage = task.stage
+        metrics.counter("stage.dispatches", stage=stage).inc()
+        metrics.counter("stage.tasks", stage=stage).inc(len(members))
+        metrics.counter("stage.rows", stage=stage).inc(
+            sum(rule.rows(m) for m in members) if rule is not None
+            else len(members))
+        run_s = wait_s = 0.0
+        for m in members:
+            d = m.duration()
+            if d is not None:
+                run_s += d
+            q = m.timestamps.get("QUEUED")
+            r = m.timestamps.get("RUNNING")
+            if q is not None and r is not None:
+                wait_s += max(0.0, r - q)
+        metrics.counter("stage.run_s", stage=stage).inc(run_s)
+        metrics.counter("stage.wait_s", stage=stage).inc(wait_s)
 
     # -- straggler watchdog --------------------------------------------
 
     def _watch(self):
         while not self._stop.is_set():
             time.sleep(0.02)
-            now = time.monotonic()
+            now = self.now()
             with self._lock:
                 running = list(self._running.values())
             for task, sub, t0 in running:
@@ -538,25 +619,36 @@ class AsyncExecutor:
     # -- metrics -----------------------------------------------------------
 
     def coalesce_stats(self) -> dict:
-        log = list(self._coalesce_log)
-        fused = [(n, r) for n, r in log if n > 1]
+        """Coalescing summary, rebuilt from the metrics registry — the
+        section schema is unchanged from the hand-rolled log it replaced."""
+        m = self.telemetry.metrics
+        n = m.value("coalesce.dispatches")
         return {
-            "dispatches": len(log),
-            "fused_dispatches": len(fused),
-            "tasks_fused": sum(n for n, _ in fused),
-            "rows_dispatched": sum(r for _, r in log),
+            "dispatches": int(n),
+            "fused_dispatches": int(m.value("coalesce.fused_dispatches")),
+            "tasks_fused": int(m.value("coalesce.tasks_fused")),
+            "rows_dispatched": int(m.value("coalesce.rows")),
             "mean_tasks_per_dispatch": (
-                sum(n for n, _ in log) / len(log) if log else 0.0),
+                m.value("coalesce.tasks") / n if n else 0.0),
         }
 
     def stage_stats(self) -> Dict[str, dict]:
         """Per-stage dispatch counters (see ``_record_stage``), with mean
-        occupancy (tasks per dispatch) and mean queue wait derived."""
-        with self._lock:
-            log = {s: dict(v) for s, v in self._stage_log.items()}
-        for v in log.values():
-            v["mean_tasks_per_dispatch"] = v["tasks"] / v["dispatches"]
-            v["mean_wait_s"] = v["wait_s"] / v["tasks"]
+        occupancy (tasks per dispatch) and mean queue wait derived —
+        rebuilt from the registry's ``stage.*`` series, same schema."""
+        m = self.telemetry.metrics
+        log: Dict[str, dict] = {}
+        for stage, c in m.labeled("stage.dispatches", "stage").items():
+            tasks = m.value("stage.tasks", stage=stage)
+            log[stage] = {
+                "dispatches": int(c.get()),
+                "tasks": int(tasks),
+                "rows": int(m.value("stage.rows", stage=stage)),
+                "run_s": m.value("stage.run_s", stage=stage),
+                "wait_s": m.value("stage.wait_s", stage=stage),
+                "mean_tasks_per_dispatch": tasks / c.get(),
+                "mean_wait_s": m.value("stage.wait_s", stage=stage) / tasks,
+            }
         return log
 
     def stage_report(self) -> Dict[str, dict]:
@@ -594,3 +686,25 @@ class AsyncExecutor:
             "mean_exec_setup_s": sum(setup) / len(setup) if setup else 0.0,
             "mean_running_s": sum(run) / len(run) if run else 0.0,
         }
+
+    def telemetry_summary(self) -> dict:
+        """The new observability section for ``report()["telemetry"]``:
+        per-kind queue-wait / device-time quantile summaries, task
+        counters, and span counts when tracing is on."""
+        m = self.telemetry.metrics
+        kinds: Dict[str, dict] = {}
+        for kind, h in m.labeled("task.queue_wait_s", "kind").items():
+            kinds.setdefault(kind, {})["queue_wait_s"] = h.summary()
+        for kind, h in m.labeled("task.device_s", "kind").items():
+            kinds.setdefault(kind, {})["device_s"] = h.summary()
+        counters = {}
+        for name in ("tasks.submitted", "tasks.completed", "tasks.failed",
+                     "tasks.retried", "tasks.canceled"):
+            by_kind = {k: int(c.get())
+                       for k, c in m.labeled(name, "kind").items()}
+            if by_kind:
+                counters[name.split(".", 1)[1]] = by_kind
+        out = {"kinds": kinds, "counters": counters}
+        if self.telemetry.tracer.enabled:
+            out["spans"] = self.telemetry.tracer.counts()
+        return out

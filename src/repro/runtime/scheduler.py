@@ -44,17 +44,32 @@ _order = (lambda t: (t.priority, t.uid))
 class TaskQueue:
     def __init__(self, backfill: bool = True, aging_s: float = 60.0,
                  now_fn: Optional[Callable[[], float]] = None,
-                 band_shares: Optional[Dict[int, float]] = None):
+                 band_shares: Optional[Dict[int, float]] = None,
+                 metrics=None):
         self._items: List[Task] = []
         self._lock = threading.Lock()
         self.backfill = backfill
         self.aging_s = aging_s
         self.now = now_fn if now_fn is not None else time.monotonic
+        self.metrics = metrics  # optional obs.MetricsRegistry: the queue
+        #   maintains queue.depth{band=...} gauges on push/pop/remove
         # weighted-fair state: {band: weight} plus per-band service counts
         # (in dispatches) and the global virtual time of the last pick
         self.band_shares: Dict[int, float] = dict(band_shares or {})
         self._served: Dict[int, float] = {}
         self._vtime = 0.0
+
+    def _gauge_depths(self):
+        """Refresh per-band depth gauges (call with ``_lock`` held)."""
+        if self.metrics is None:
+            return
+        depths: Dict[int, int] = {}
+        for t in self._items:
+            depths[t.band] = depths.get(t.band, 0) + 1
+        for band, g in self.metrics.labeled("queue.depth", "band").items():
+            g.set(depths.pop(int(band), 0))
+        for band, n in depths.items():
+            self.metrics.gauge("queue.depth", band=band).set(n)
 
     def set_band_shares(self, shares: Optional[Dict[int, float]]):
         """Install (or clear, with None/empty) the weighted-fair band
@@ -77,6 +92,7 @@ class TaskQueue:
                 self._served[task.band] = max(
                     self._served.get(task.band, 0.0), self._vtime * w)
             insort(self._items, task, key=_order)  # O(n) vs full re-sort
+            self._gauge_depths()
 
     def _weight(self, band: int) -> float:
         return max(float(self.band_shares.get(band, 1.0)), 1e-9)
@@ -123,8 +139,11 @@ class TaskQueue:
             design_waiting = any(not t.preemptible for t in self._items)
             bands = sorted({t.band for t in self._items})
             if not self.band_shares or len(bands) <= 1:
-                return self._scan(range(len(self._items)), fits,
-                                  design_waiting, now)
+                got = self._scan(range(len(self._items)), fits,
+                                 design_waiting, now)
+                if got is not None:
+                    self._gauge_depths()
+                return got
             # starvation guard first: any aged task (any band, any class)
             # pops ahead of the fair pick — nothing waits past aging_s
             aged = [i for i, t in enumerate(self._items)
@@ -140,6 +159,7 @@ class TaskQueue:
             if got is not None:
                 self._served[got.band] = self._served.get(got.band, 0.0) + 1.0
                 self._vtime = self._served[got.band] / self._weight(got.band)
+                self._gauge_depths()
             return got
 
     def pop_matching(self, pred: Callable[[Task], bool],
@@ -165,6 +185,8 @@ class TaskQueue:
                             budget -= r
                         continue
                 i += 1
+            if taken:
+                self._gauge_depths()
         return taken
 
     def matching_rows(self, pred: Callable[[Task], bool],
@@ -181,7 +203,9 @@ class TaskQueue:
         with self._lock:
             for i, t in enumerate(self._items):
                 if t.uid == uid:
-                    return self._items.pop(i)
+                    got = self._items.pop(i)
+                    self._gauge_depths()
+                    return got
         return None
 
     def band_stats(self) -> Dict[int, dict]:

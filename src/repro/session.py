@@ -45,6 +45,8 @@ from repro.core import (BinderConfig, Coordinator, DesignProtocol,
 from repro.core.payload import FinetunePayload
 from repro.data import protein_design_tasks
 from repro.learn import EvolutionConfig, ReplayBuffer, TrainerService
+from repro.obs import (CompileWatcher, Telemetry, Tracer, write_metrics,
+                       write_trace)
 from repro.runtime import AsyncExecutor, DeviceAllocator
 from repro.runtime.allocator import choose_length_buckets
 
@@ -130,6 +132,11 @@ class CampaignSpec:
     # instead of paying multi-second "Exec setup" on every run. None falls
     # back to $IMPRESS_COMPILATION_CACHE; empty/unset disables.
     compilation_cache_dir: Optional[str] = None
+    # Span tracing + Perfetto export: when set (or via $IMPRESS_TRACE_DIR),
+    # the session enables the obs.Tracer and run() writes trace.json
+    # (chrome://tracing / ui.perfetto.dev loadable) and metrics.json there.
+    # None/empty: tracing off — the metrics registry stays on either way.
+    trace_dir: Optional[str] = None
 
 
 # -- length bucketing -------------------------------------------------------
@@ -327,11 +334,19 @@ class ImpressSession:
         devs = list(devices if devices is not None else jax.devices())
         if spec.device_budget:
             devs = devs[:spec.device_budget]
-        self.allocator = DeviceAllocator(devs)
+        # one telemetry bundle for the whole campaign: allocator grants,
+        # queue depths, and task spans share one registry and one clock.
+        # The tracer is enabled only when a trace dir is configured.
+        self.trace_dir = (spec.trace_dir
+                          or os.environ.get("IMPRESS_TRACE_DIR") or None)
+        self.telemetry = Telemetry(
+            tracer=Tracer(enabled=bool(self.trace_dir)))
+        self.allocator = DeviceAllocator(devs, telemetry=self.telemetry)
         self.executor = AsyncExecutor(
             self.allocator, max_workers=spec.max_workers,
             max_retries=spec.max_retries,
-            straggler_factor=spec.straggler_factor)
+            straggler_factor=spec.straggler_factor,
+            telemetry=self.telemetry)
         self._shutdown = False
         try:
             self._build(spec, payload, jax)
@@ -342,6 +357,12 @@ class ImpressSession:
 
     def _build(self, spec: CampaignSpec, payload, jax):
         t0 = time.monotonic()
+        from repro.core import payload as payload_mod
+        # per-kind compile-log watermarks: long-lived processes (benches,
+        # serve) only attribute compiles that happen after this session
+        # was built when folding compile walls into the metrics registry
+        self._compile_log_start = {k: len(v) for k, v
+                                   in payload_mod.compile_log.items()}
         self.compilation_cache_dir = (
             spec.compilation_cache_dir
             or os.environ.get("IMPRESS_COMPILATION_CACHE") or None)
@@ -452,15 +473,33 @@ class ImpressSession:
             raise ValueError("CampaignSpec.protocols is empty")
         if not self._populated:
             self._populate()
-        raw = self.coordinator.run(
-            timeout=self.spec.timeout if timeout is None else timeout)
+        from repro.core import payload as payload_mod
+        with CompileWatcher(self.telemetry.metrics) as watcher:
+            raw = self.coordinator.run(
+                timeout=self.spec.timeout if timeout is None else timeout)
+            watcher.absorb_compile_log(payload_mod.compile_log,
+                                       self._compile_log_start)
         raw["compile"] = {
             "persistent_cache_dir": self.compilation_cache_dir,
             "mean_exec_setup_s": raw["executor"]["mean_exec_setup_s"],
             "length_buckets": (list(self.length_buckets)
                                if self.length_buckets else None),
         }
+        if self.trace_dir:
+            raw["telemetry"] = dict(
+                raw.get("telemetry", {}),
+                trace_path=write_trace(
+                    self.telemetry.tracer,
+                    os.path.join(self.trace_dir, "trace.json")),
+                metrics_path=write_metrics(
+                    self.telemetry.metrics,
+                    os.path.join(self.trace_dir, "metrics.json")))
         return CampaignReport.from_raw(raw)
+
+    def metrics_snapshot(self) -> dict:
+        """Live flat snapshot of the campaign's metrics registry — safe to
+        call from another thread mid-run (serve's live metrics view)."""
+        return self.telemetry.metrics.snapshot()
 
     # -- checkpoint / restore ----------------------------------------------
 

@@ -38,6 +38,7 @@ ARCH_SECTIONS = [
     "Decode kernel & paged KV cache",
     "Model evolution",
     "Heterogeneous stages & fair scheduling",
+    "Telemetry & tracing",
     "Adding a new task kind",
 ]
 

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""CI trace smoke: run a short mixed three-protocol campaign with span
+tracing on, then validate the Perfetto export.
+
+Checks (exits non-zero on any failure):
+
+* the campaign writes ``trace.json`` + ``metrics.json`` into the trace dir
+  (``$IMPRESS_TRACE_DIR`` or ``--trace-dir``);
+* the trace parses as Chrome/Perfetto trace-event JSON;
+* every task kind that ran has at least one task span;
+* every completed task carries the full queued -> granted -> dispatched ->
+  completed lifecycle chain;
+* the metrics snapshot has the core runtime series.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_trace.py [--trace-dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-dir", default=None,
+                    help="where to write the trace (default: "
+                         "$IMPRESS_TRACE_DIR, else a temp dir)")
+    ap.add_argument("--timeout", type=float, default=300.0)
+    args = ap.parse_args(argv)
+    trace_dir = (args.trace_dir or os.environ.get("IMPRESS_TRACE_DIR")
+                 or tempfile.mkdtemp(prefix="impress-trace-"))
+
+    from repro.obs import validate_trace
+    from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
+
+    spec = CampaignSpec(
+        structures=2, receptor_len=(12, 16),
+        protocols=(
+            ProtocolSpec("im-rp", n_cycles=1, n_candidates=2,
+                         score_batch=2),
+            ProtocolSpec("cont-v", n_cycles=1, n_candidates=2),
+            ProtocolSpec("binder", n_cycles=1, n_candidates=2,
+                         score_batch=2),
+        ),
+        timeout=args.timeout, trace_dir=trace_dir)
+    with ImpressSession(spec) as session:
+        report = session.run()
+
+    tel = report["telemetry"]
+    failures = []
+    trace_path = tel.get("trace_path")
+    metrics_path = tel.get("metrics_path")
+    if not trace_path or not os.path.exists(trace_path):
+        failures.append(f"trace not written: {trace_path!r}")
+    if not metrics_path or not os.path.exists(metrics_path):
+        failures.append(f"metrics not written: {metrics_path!r}")
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures))
+        return 1
+
+    info = validate_trace(trace_path)
+    print(f"trace: {info['n_events']} events, "
+          f"{info['full_chains']} full lifecycle chains, kinds: "
+          + ", ".join(f"{k}={n}" for k, n in sorted(info["kinds"].items())))
+
+    if not info["kinds"]:
+        failures.append("no task spans in trace")
+    for kind, n in info["kinds"].items():
+        if n < 1:
+            failures.append(f"kind {kind}: no spans")
+    completed = sum(
+        tel.get("counters", {}).get("completed", {}).values())
+    if info["full_chains"] < 1:
+        failures.append("no task has a full "
+                        "queued->granted->dispatched->completed chain")
+    if completed and info["full_chains"] < completed:
+        failures.append(
+            f"only {info['full_chains']}/{completed} completed tasks "
+            f"have full lifecycle chains")
+
+    with open(metrics_path) as f:
+        snap = json.load(f)
+    for series in ("coalesce.dispatches", "devices.free", "alloc.grants"):
+        if series not in snap:
+            failures.append(f"metrics snapshot missing {series}")
+    if not tel.get("kinds"):
+        failures.append("report telemetry has no per-kind summaries")
+
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures))
+        return 1
+    print(f"OK: trace smoke passed ({trace_dir})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
