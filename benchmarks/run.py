@@ -1,10 +1,11 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 table, plus the throughput benchmarks for the two batched hot stages.
 Prints ``name,us_per_call,derived`` CSV lines; the ``scoring``,
-``generate`` and ``pipeline`` entries additionally write machine-readable
-``BENCH_scoring.json`` / ``BENCH_generate.json`` / ``BENCH_pipeline.json``
-records (candidates/sec, occupancy, speedup vs baseline, per-stage waits)
-— the repo's perf trajectory across PRs.
+``generate``, ``pipeline`` and ``gateway`` entries additionally write
+machine-readable ``BENCH_scoring.json`` / ``BENCH_generate.json`` /
+``BENCH_pipeline.json`` / ``BENCH_gateway.json`` records (candidates/sec,
+occupancy, speedup vs baseline, per-stage and per-tenant waits) — the
+repo's perf trajectory across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,scoring,...]
 """
@@ -18,7 +19,7 @@ def emit(name, us_per_call, derived):
 
 
 BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution",
-           "scoring", "generate", "pipeline")
+           "scoring", "generate", "pipeline", "gateway")
 
 
 def main() -> None:
@@ -63,6 +64,9 @@ def main() -> None:
     if "pipeline" in only:
         from benchmarks import bench_pipeline
         bench_pipeline.main(print, argv=["--json", "BENCH_pipeline.json"])
+    if "gateway" in only:
+        from benchmarks import bench_gateway
+        bench_gateway.main(print, argv=["--json", "BENCH_gateway.json"])
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

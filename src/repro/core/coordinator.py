@@ -43,7 +43,7 @@ protocols own their pipelines' (de)serialization.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
@@ -57,13 +57,19 @@ class _ProtocolBinding:
     parked sub-pipeline proposals."""
 
     def __init__(self, protocol: DesignProtocol, name: str,
-                 max_inflight: Optional[int]):
+                 max_inflight: Optional[int],
+                 decorate: Optional[Callable[[Task], None]] = None):
         self.protocol = protocol
         self.name = name
         self.max_inflight = max_inflight   # None = unbounded (IM-RP)
         self.inflight = 0
         self.ready: List[Task] = []        # submission channel buffer
         self.parked: List[dict] = []       # spawn proposals awaiting devices
+        self.decorate = decorate           # per-task stamp applied just
+        #   before submission — the gateway installs one per campaign to
+        #   set task.tenant and shift task.band into the tenant's stride
+        self.paused = False                # paused: ready tasks stay
+        #   buffered (nothing new submits); inflight work runs to completion
 
 
 class Coordinator:
@@ -94,18 +100,46 @@ class Coordinator:
 
     def add_protocol(self, protocol: DesignProtocol, *,
                      name: Optional[str] = None,
-                     max_inflight: Optional[int] = None) -> str:
+                     max_inflight: Optional[int] = None,
+                     decorate: Optional[Callable[[Task], None]] = None
+                     ) -> str:
         """Register a protocol for routing. ``max_inflight`` bounds this
         protocol's concurrently-submitted tasks (None = unbounded); each
         protocol gets its own budget, so a sequential control and an
-        asynchronous campaign coexist on one executor."""
+        asynchronous campaign coexist on one executor. ``decorate`` (if
+        given) is called on every task of this binding just before it is
+        submitted — the gateway's tenant stamp."""
         name = name or f"protocol{len(self._bindings)}"
         if name in self._by_name:
             raise ValueError(f"protocol name {name!r} already registered")
-        b = _ProtocolBinding(protocol, name, max_inflight)
+        b = _ProtocolBinding(protocol, name, max_inflight, decorate)
         self._bindings.append(b)
         self._by_name[name] = b
         return name
+
+    def pause_protocol(self, name: str):
+        """Stop submitting this binding's tasks: ready tasks stay buffered
+        and completions stop producing submissions (the handler still runs,
+        so pipeline state keeps advancing to a checkpointable boundary);
+        inflight device work runs to completion."""
+        self._by_name[name].paused = True
+
+    def resume_protocol(self, name: str):
+        b = self._by_name[name]
+        b.paused = False
+        self._pump()
+        self._drain_parked()
+
+    def cancel_protocol(self, name: str):
+        """Deactivate a binding's campaign: its pipelines stop advancing
+        (inflight completions are dropped by ``_handle``), its buffered and
+        parked work is discarded. The binding stays registered so late
+        completions still route/decrement correctly."""
+        b = self._by_name[name]
+        for pl in self._binding_pipelines(b):
+            pl.active = False
+        b.ready = []
+        b.parked = []
 
     @property
     def protocol(self) -> Optional[DesignProtocol]:
@@ -133,10 +167,17 @@ class Coordinator:
             "call add_protocol first (a silent auto-register would bypass "
             "the registered binding's max_inflight cap)")
 
+    # long-lived multiplexers (the gateway) set this so events are tagged
+    # with their binding even while only one binding is registered yet —
+    # campaign-sliced event streams must not depend on arrival order
+    always_tag_events = False
+
     def _event_tag(self, binding: Optional[_ProtocolBinding]) -> dict:
-        """Events carry the protocol name only in multi-protocol campaigns,
-        so single-protocol event streams stay identical to the seed."""
-        if binding is None or len(self._bindings) <= 1:
+        """Events carry the protocol name only in multi-protocol campaigns
+        (or when ``always_tag_events`` is set), so single-protocol event
+        streams stay identical to the seed."""
+        if binding is None or (len(self._bindings) <= 1
+                               and not self.always_tag_events):
             return {}
         return {"protocol": binding.name}
 
@@ -156,13 +197,16 @@ class Coordinator:
 
     def _pump(self):
         for b in self._bindings:
-            while b.ready and (b.max_inflight is None
-                               or b.inflight < b.max_inflight):
+            while b.ready and not b.paused \
+                    and (b.max_inflight is None
+                         or b.inflight < b.max_inflight):
                 task = b.ready.pop(0)
                 self._task_pipeline[task.uid] = task.pipeline_id
                 self._task_binding[task.uid] = b
                 b.inflight += 1
                 self._inflight += 1
+                if b.decorate is not None:
+                    b.decorate(task)   # tenant stamp / band shift
                 self.executor.submit(task)
                 if task.trace is not None:
                     # span tracing on: tag the record with the protocol
@@ -170,6 +214,8 @@ class Coordinator:
                     # can draw per-protocol tracks (multi-tenant
                     # attribution of coalesced rows)
                     task.trace["protocol"] = b.name
+                    if task.tenant is not None:
+                        task.trace["tenant"] = task.tenant
 
     # -- sub-pipelines -------------------------------------------------------
 
@@ -280,34 +326,45 @@ class Coordinator:
 
     # -- main loop --------------------------------------------------------------
 
+    def step(self, drain_timeout: float = 0.05) -> bool:
+        """One iteration of the coordinator loop: tick the trainer, drain at
+        most one completion, route it, pump submissions. Returns ``False``
+        when the campaign pool is quiescent (no active pipeline, nothing
+        inflight or buffered, trainer idle) — ``run`` stops there; a
+        long-lived caller (the gateway's drive thread) keeps stepping, since
+        new campaigns may register at any time."""
+        if self.trainer is not None:
+            self.trainer.tick()   # opportunistic model evolution
+        active = any(p.active for p in self.pipelines.values())
+        if not active and self._inflight == 0 \
+                and not any(b.ready for b in self._bindings) \
+                and (self.trainer is None or not self.trainer.busy()):
+            return False
+        task = self.executor.drain(timeout=drain_timeout)
+        if task is None:
+            if self._inflight == 0:
+                self._pump()
+            return True
+        if self.trainer is not None and self.trainer.owns(task.uid):
+            # trainer-task completion: routed to the service, never
+            # counted against pipeline inflight
+            self.trainer.on_complete(task)
+            return True
+        if task.speculative_of is None:
+            self._inflight -= 1
+            b = self._task_binding.get(task.uid)
+            if b is not None:
+                b.inflight -= 1
+        self._handle(task)
+        self._pump()
+        self._drain_parked()
+        return True
+
     def run(self, timeout: float = 600.0) -> dict:
         t0 = time.monotonic()
         while time.monotonic() - t0 < timeout:
-            if self.trainer is not None:
-                self.trainer.tick()   # opportunistic model evolution
-            active = any(p.active for p in self.pipelines.values())
-            if not active and self._inflight == 0 \
-                    and not any(b.ready for b in self._bindings) \
-                    and (self.trainer is None or not self.trainer.busy()):
+            if not self.step():
                 break
-            task = self.executor.drain(timeout=0.05)
-            if task is None:
-                if self._inflight == 0:
-                    self._pump()
-                continue
-            if self.trainer is not None and self.trainer.owns(task.uid):
-                # trainer-task completion: routed to the service, never
-                # counted against pipeline inflight
-                self.trainer.on_complete(task)
-                continue
-            if task.speculative_of is None:
-                self._inflight -= 1
-                b = self._task_binding.get(task.uid)
-                if b is not None:
-                    b.inflight -= 1
-            self._handle(task)
-            self._pump()
-            self._drain_parked()
         return self.report(makespan=time.monotonic() - t0)
 
     # -- reporting ------------------------------------------------------------
@@ -363,6 +420,24 @@ class Coordinator:
                 if self._pipeline_binding.get(p.uid, self._bindings[0])
                 is binding]
 
+    def protocol_pipelines(self, name: str) -> List[Pipeline]:
+        """Pipelines owned by the named binding — the gateway reads these
+        to build per-campaign reports on the shared coordinator."""
+        return self._binding_pipelines(self._by_name[name])
+
+    def protocol_idle(self, name: str) -> bool:
+        """True when the named binding has nothing left to do: no active
+        pipeline, no inflight task, nothing buffered or parked — the
+        gateway's per-campaign completion signal (the global loop keeps
+        running for its co-tenants)."""
+        b = self._by_name[name]
+        return (b.inflight == 0 and not b.ready and not b.parked
+                and not any(p.active for p in self._binding_pipelines(b)))
+
+    def binding_name_of(self, task: Task) -> Optional[str]:
+        b = self._task_binding.get(task.uid)
+        return b.name if b is not None else None
+
     def report(self, makespan: float) -> dict:
         pls = list(self.pipelines.values())
         per_protocol = {}
@@ -410,20 +485,24 @@ class Coordinator:
 
     # -- checkpoint/restart -----------------------------------------------------
 
-    def state_dict(self) -> dict:
+    def state_dict(self, names: Optional[List[str]] = None) -> dict:
         """Versioned, JSON-serializable campaign state. Pipelines serialize
         through their owning protocol (``DesignProtocol.pipeline_state``)
         and carry the protocol binding name; protocol-level state (e.g.
-        spawn counters) is stored per binding."""
+        spawn counters) is stored per binding. ``names`` restricts the
+        checkpoint to those bindings — the gateway checkpoints one
+        campaign's bindings without snapshotting its co-tenants."""
+        bindings = (self._bindings if names is None
+                    else [self._by_name[n] for n in names])
         recs = []
-        for b in self._bindings:
+        for b in bindings:
             for p in self._binding_pipelines(b):
                 recs.append(dict(b.protocol.pipeline_state(p),
                                  protocol=b.name))
         return {
             "version": 2,
             "protocols": {b.name: b.protocol.state_dict()
-                          for b in self._bindings},
+                          for b in bindings},
             "pipelines": recs,
         }
 

@@ -69,6 +69,11 @@ class Task:
     #   versa) beyond its share. Band 0 with no shares = plain FIFO
     preempt_requested: bool = False  # cooperative yield signal: the payload
     #   fn checks this between steps and returns early with resume state
+    tenant: Optional[str] = None  # owning tenant (multi-tenant gateway):
+    #   the coordinator's binding decorator stamps it, the executor slices
+    #   queue-wait/device-time metrics by it, and quota policies charge the
+    #   dispatch leader's tenant for the devices a grant holds. None (the
+    #   single-tenant scripts) changes nothing anywhere
     trace: Optional[Dict[str, Any]] = None  # lifecycle trace record, owned
     #   by the executor's ``obs.Tracer`` when span tracing is on: event
     #   chain, fused-dispatch links, protocol binding — see obs/trace.py.

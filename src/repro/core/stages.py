@@ -182,10 +182,21 @@ class StagedBinderProtocol(DesignProtocol):
             "reselections": 0,
             "trajectories": 0,
             "gen_version": 0,
+            "stage_cursor": "backbone_batch",  # next task kind to submit:
+            #   each route handler advances it, so a pipeline checkpointed
+            #   mid-cycle (e.g. with a fold task inflight) resumes at the
+            #   exact stage it stopped at instead of redoing the cycle's
+            #   backbone stage — whose route *mutates* meta["backbone"],
+            #   so redoing it would fork the design trajectory
         })
 
     def first_task(self, pl: Pipeline) -> Task:
-        return self._backbone_task(pl)
+        cursor = pl.meta.get("stage_cursor", "backbone_batch")
+        if cursor == "generate_batch":
+            return self._design_task(pl)
+        if cursor == "predict_batch":
+            return self._fold_task(pl)
+        return self._backbone_task(pl)   # fresh pipeline / legacy state
 
     # -- task builders -----------------------------------------------------
 
@@ -270,6 +281,7 @@ class StagedBinderProtocol(DesignProtocol):
         best = int(np.argmax(scores))
         pl.meta["backbone"] = np.asarray(cands[best], np.float32)
         pl.meta["backbone_fit"] = float(scores[best])
+        pl.meta["stage_cursor"] = "generate_batch"
         return Decision(tasks=[self._design_task(pl)])
 
     def _route_generate(self, pl: Pipeline, result) -> Decision:
@@ -288,6 +300,7 @@ class StagedBinderProtocol(DesignProtocol):
                                  np.asarray(lls)[order])
         pl.meta["cand_idx"] = 0
         pl.meta["reselections"] = 0
+        pl.meta["stage_cursor"] = "predict_batch"
         return Decision(tasks=[self._fold_task(pl)])
 
     def _route_predict(self, pl: Pipeline, result) -> Decision:
@@ -344,6 +357,7 @@ class StagedBinderProtocol(DesignProtocol):
         if pl.cycle >= c.n_cycles:
             pl.active = False
             return {"tasks": [], "event": "completed"}
+        pl.meta["stage_cursor"] = "backbone_batch"
         return {"tasks": [self._backbone_task(pl)], "event": "accepted"}
 
     def _update_structure(self, pl: Pipeline, seq: np.ndarray):

@@ -12,6 +12,22 @@ mix of them concurrently on one pilot:
 
   PYTHONPATH=src python -m repro.launch.serve --campaign im-rp,cont-v \\
       --structures 4 --cycles 3 [--evolution]
+
+Ctrl-C in campaign mode is graceful: the campaign is checkpointed (to
+``--checkpoint-out``) and the partial report printed before exiting, so
+an interrupted run never loses its accepted designs.
+
+Gateway mode starts the persistent multi-tenant service instead — one
+resident runtime, campaigns submitted over a JSON HTTP API, co-tenant
+same-bucket batches fused across campaigns:
+
+  PYTHONPATH=src python -m repro.launch.serve --gateway --port 8642 \\
+      [--tokens tok-a=alice,tok-b=bob] [--quota alice=2.0:4]
+
+The CLI is deliberately thin: every behavior lives in
+``repro.gateway.GatewayService``; this file only parses flags, prints
+curl examples, and turns Ctrl-C into a graceful drain (every live
+campaign checkpointed to ``--checkpoint-dir``).
 """
 
 from __future__ import annotations
@@ -69,11 +85,18 @@ def serve_batch(cfg, *, batch, prompt_len, gen, temperature=0.0, seed=0):
 
 def serve_campaign(*, protocols, structures, cycles, candidates,
                    receptor_len, evolution, timeout=600.0, trace_dir=None,
-                   metrics_every=0.0):
+                   metrics_every=0.0,
+                   checkpoint_out="impress-checkpoint.json"):
     """Run a design campaign through the session facade and return its
     versioned report. ``trace_dir`` enables span tracing (Perfetto JSON +
     metrics snapshot written there); ``metrics_every`` > 0 prints a live
-    metrics snapshot line every that-many seconds while the campaign runs."""
+    metrics snapshot line every that-many seconds while the campaign runs.
+
+    KeyboardInterrupt is a graceful exit, not a crash: the campaign is
+    checkpointed to ``checkpoint_out`` and the partial report over
+    whatever completed so far is returned — previously Ctrl-C discarded
+    both, losing every accepted design of a long pilot."""
+    import json
     import threading
 
     from repro.session import CampaignSpec, ImpressSession, ProtocolSpec
@@ -100,8 +123,66 @@ def serve_campaign(*, protocols, structures, cycles, candidates,
             threading.Thread(target=_live, daemon=True).start()
         try:
             return session.run()
+        except KeyboardInterrupt:
+            if checkpoint_out:
+                with open(checkpoint_out, "w") as f:
+                    json.dump(session.checkpoint(), f)
+                print(f"[serve] interrupted: campaign checkpointed to "
+                      f"{checkpoint_out} (resume via "
+                      f"ImpressSession.from_checkpoint)", flush=True)
+            return session.partial_report()
         finally:
             stop.set()
+
+
+def serve_gateway(*, host="127.0.0.1", port=8642, tokens=None, quotas=None,
+                  max_workers=8, reduced=True, payload_length=64,
+                  trace_dir=None, checkpoint_dir=None):
+    """Start the persistent gateway + its HTTP front-end and block until
+    Ctrl-C, which drains gracefully: every live campaign is checkpointed
+    (written to ``checkpoint_dir`` when given) before the process exits."""
+    from repro.gateway import GatewayService, make_server
+    gw = GatewayService(max_workers=max_workers, reduced=reduced,
+                        payload_length=payload_length, quotas=quotas,
+                        trace_dir=trace_dir, checkpoint_dir=checkpoint_dir)
+    gw.start()
+    srv = make_server(gw, host=host, port=port, tokens=tokens)
+    bound_host, bound_port = srv.server_address[:2]
+    base = f"http://{bound_host}:{bound_port}"
+    auth = (f' -H "Authorization: Bearer {next(iter(tokens))}"'
+            if tokens else "")
+    print(f"[serve] gateway listening on {base}", flush=True)
+    print(f"[serve]   submit:  curl{auth} -X POST {base}/campaigns "
+          "-d '{\"structures\": 2, \"receptor_len\": [24, 32], "
+          "\"protocols\": [{\"kind\": \"binder\"}]}'", flush=True)
+    print(f"[serve]   report:  curl{auth} {base}/campaigns/c0000/report",
+          flush=True)
+    print(f"[serve]   metrics: curl{auth} {base}/metrics", flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.shutdown()
+        checkpoints = gw.shutdown()
+        if checkpoints:
+            where = (f" to {checkpoint_dir}" if checkpoint_dir
+                     else " (pass --checkpoint-dir to persist)")
+            print(f"[serve] checkpointed {len(checkpoints)} live "
+                  f"campaign(s){where}: {sorted(checkpoints)}", flush=True)
+        print("[serve] gateway stopped", flush=True)
+
+
+def _parse_kv(arg, what):
+    """Parse ``a=x,b=y`` flags (``--tokens``/``--quota``) into a dict."""
+    out = {}
+    for part in filter(None, (arg or "").split(",")):
+        if "=" not in part:
+            raise SystemExit(f"[serve] bad --{what} entry {part!r} "
+                             f"(want key=value[,key=value...])")
+        k, v = part.split("=", 1)
+        out[k.strip()] = v.strip()
+    return out or None
 
 
 def main():
@@ -126,7 +207,40 @@ def main():
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="campaign mode: print a live metrics snapshot "
                          "every N seconds while the campaign runs")
+    ap.add_argument("--checkpoint-out", default="impress-checkpoint.json",
+                    help="campaign mode: where Ctrl-C writes the campaign "
+                         "checkpoint ('' disables)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve the persistent multi-tenant gateway "
+                         "(JSON HTTP API) instead")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8642)
+    ap.add_argument("--tokens", default=None, metavar="TOK=TENANT,...",
+                    help="gateway mode: bearer-token auth table; omit for "
+                         "open single-user mode")
+    ap.add_argument("--quota", default=None, metavar="TENANT=SHARE[:CAP],..",
+                    help="gateway mode: per-tenant fair share and optional "
+                         "hard device cap (e.g. alice=2.0:4,bob=1.0)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="gateway mode: Ctrl-C writes every live "
+                         "campaign's checkpoint here")
     args = ap.parse_args()
+    if args.gateway:
+        from repro.gateway import TenantQuota
+        quotas = None
+        if args.quota:
+            quotas = {}
+            for tenant, v in (_parse_kv(args.quota, "quota") or {}).items():
+                share, _, cap = v.partition(":")
+                quotas[tenant] = TenantQuota(
+                    share=float(share or 1.0),
+                    max_devices=int(cap) if cap else None)
+        serve_gateway(host=args.host, port=args.port,
+                      tokens=_parse_kv(args.tokens, "tokens"),
+                      quotas=quotas,
+                      trace_dir=args.trace_dir,
+                      checkpoint_dir=args.checkpoint_dir)
+        return
     if args.campaign:
         rep = serve_campaign(protocols=args.campaign.split(","),
                              structures=args.structures, cycles=args.cycles,
@@ -134,7 +248,8 @@ def main():
                              receptor_len=args.receptor_len,
                              evolution=args.evolution,
                              trace_dir=args.trace_dir,
-                             metrics_every=args.metrics_every)
+                             metrics_every=args.metrics_every,
+                             checkpoint_out=args.checkpoint_out)
         print(f"[serve] campaign schema v{rep.schema_version}: "
               f"{rep.trajectories} trajectories in {rep.makespan_s:.1f}s, "
               f"utilization {100 * rep.utilization:.0f}%")

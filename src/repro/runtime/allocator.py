@@ -212,14 +212,21 @@ class DeviceAllocator:
         return max(int(floor), n)
 
     def request_for_rows(self, rows: int, floor: int = 1,
-                         stage: Optional[str] = None) -> Optional[SubMesh]:
+                         stage: Optional[str] = None,
+                         max_devices: Optional[int] = None
+                         ) -> Optional[SubMesh]:
         """Carve a sub-mesh sized proportionally to a device batch's
         bucketed row count (replacing fixed per-kind device counts). Under
         device pressure the grant shrinks by halving toward ``floor``;
         returns None only when even ``floor`` devices cannot be carved.
-        Every grant is recorded for ``shape_stats`` (and, keyed by
-        ``stage``, for ``stage_shape_stats``)."""
+        ``max_devices`` caps the grant from above (per-tenant quota
+        enforcement: the row-proportional upsize must not blow through a
+        tenant's remaining device budget), never below ``floor``. Every
+        grant is recorded for ``shape_stats`` (and, keyed by ``stage``,
+        for ``stage_shape_stats``)."""
         want = self.grant_for_rows(rows, floor)
+        if max_devices is not None:
+            want = max(int(floor), min(want, int(max_devices)))
         n = want
         while True:
             sub = self.request(n, stage=stage)

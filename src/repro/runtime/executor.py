@@ -176,6 +176,12 @@ class AsyncExecutor:
         self._durations: Dict[str, List[float]] = {}
         self._running: Dict[int, tuple] = {}  # uid -> (task, submesh, t0)
         self._preemptions = 0   # preempt_requested signals sent
+        # allocation policy (per-tenant quotas): admission gate + device
+        # cap + grant/release charging; None = unrestricted (the default)
+        self._policy = None
+        # recent cross-tenant fused dispatches: the tenant sets whose tasks
+        # shared one device batch (bounded; coalesce_stats evidence)
+        self._fused_tenant_sets: List[Tuple[str, ...]] = []
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._wake = threading.Event()
@@ -215,6 +221,23 @@ class AsyncExecutor:
         session facade) validate a protocol's handler registry against the
         executor before a campaign starts."""
         return frozenset(self._fns)
+
+    def set_allocation_policy(self, policy):
+        """Install (or clear, with None) a duck-typed allocation policy —
+        the per-tenant quota hook. The policy sees every dispatch:
+        ``admit(task)`` gates the queue pick (a hard cap holds tasks back
+        without blocking co-tenants), ``device_cap(task)`` bounds the
+        row-proportional grant, and ``granted``/``released`` charge the
+        leader's tenant for the devices a dispatch holds. Coalesced
+        co-members ride the leader's grant free — cross-tenant fusion is
+        the throughput story, so quotas never tax it."""
+        self._policy = policy
+        self.queue.set_admission(policy.admit if policy is not None else None)
+
+    def _device_cap(self, task: Task) -> Optional[int]:
+        if self._policy is None:
+            return None
+        return self._policy.device_cap(task)
 
     def submit(self, task: Task):
         with self._lock:
@@ -361,7 +384,8 @@ class AsyncExecutor:
         if self.allocator.grant_for_rows(rows, res.n_devices) <= sub.n_devices:
             return sub
         bigger = self.allocator.request_for_rows(rows, floor=res.n_devices,
-                                                 stage=task.stage)
+                                                 stage=task.stage,
+                                                 max_devices=self._device_cap(task))
         if bigger is None or bigger.n_devices <= sub.n_devices:
             if bigger is not None:
                 self.allocator.release(bigger)
@@ -385,7 +409,8 @@ class AsyncExecutor:
                 self._compatible_with(task, rule), rows=rule.rows)
             rows = min(rule.max_rows, rows + queued)
         return self.allocator.request_for_rows(rows, floor=res.n_devices,
-                                               stage=task.stage)
+                                               stage=task.stage,
+                                               max_devices=self._device_cap(task))
 
     def _worker(self):
         while not self._stop.is_set():
@@ -397,6 +422,10 @@ class AsyncExecutor:
                 continue
             sub = self._allocate(task)
             if sub is None:  # raced; try again later
+                if self._policy is not None:
+                    # refund the reservation admit() took for this pick —
+                    # the task goes back to the queue unexecuted
+                    self._policy.denied(task)
                 if not task.preemptible:
                     # a design task lost its devices: trainer work yields
                     self.preempt_preemptible()
@@ -405,6 +434,10 @@ class AsyncExecutor:
             self._track([task], sub)
             members, payload = self._coalesce_members(task, sub)
             sub = self._maybe_regrow(task, sub, members)
+            if self._policy is not None:
+                # charge the leader's tenant for the final grant (after any
+                # regrow) — co-members fused into this dispatch ride free
+                self._policy.granted(task, sub)
             rule = self._rule_for(task)
             tel = self.telemetry
             span = tel.tracer.dispatch_begin(task, members, sub)
@@ -464,6 +497,7 @@ class AsyncExecutor:
                     span, "ok", rows=(sum(rule.rows(m) for m in members)
                                       if rule is not None else len(members)))
                 self._record_stage(task, members, rule)
+                self._record_tenants(members)
             except Exception as e:  # noqa: BLE001 — any payload failure
                 if port is not None and port.admitted \
                         and port.admitted[-1] is not members[-1]:
@@ -490,6 +524,8 @@ class AsyncExecutor:
                     for m in members:
                         self._running.pop(m.uid, None)
                 self.allocator.release(sub)
+                if self._policy is not None:
+                    self._policy.released(task, sub)
                 now = self.now()
                 for m in retried:  # retry members independently (re-fusable)
                     tel.tracer.mark(m, "retried")
@@ -505,6 +541,8 @@ class AsyncExecutor:
                 for m in members:
                     self._running.pop(m.uid, None)
             self.allocator.release(sub)
+            if self._policy is not None:
+                self._policy.released(task, sub)
             self._wake.set()
             for m in finished:
                 self.completions.put(m)
@@ -523,6 +561,31 @@ class AsyncExecutor:
         d = m.duration()
         if d is not None:
             metrics.histogram("task.device_s", kind=m.kind).observe(d)
+        if m.tenant is not None:
+            # per-tenant slices (gateway): same series, tenant-labeled —
+            # GET /metrics and report()["telemetry"]["tenants"] read these
+            metrics.counter("tenant.tasks", tenant=m.tenant).inc()
+            if q is not None and r is not None:
+                metrics.histogram("tenant.queue_wait_s",
+                                  tenant=m.tenant).observe(max(0.0, r - q))
+            if d is not None:
+                metrics.histogram("tenant.device_s",
+                                  tenant=m.tenant).observe(d)
+
+    def _record_tenants(self, members: List[Task]):
+        """Cross-tenant fusion evidence: when one device batch held tasks
+        from more than one tenant, count it and remember the tenant set —
+        ``coalesce_stats()["cross_tenant"]`` is the proof the gateway's
+        two-tenant benchmark and smoke test assert on."""
+        tenants = sorted({m.tenant for m in members if m.tenant is not None})
+        if len(tenants) < 2:
+            return
+        metrics = self.telemetry.metrics
+        metrics.counter("coalesce.cross_tenant_dispatches").inc()
+        metrics.counter("coalesce.cross_tenant_tasks").inc(len(members))
+        with self._lock:
+            self._fused_tenant_sets.append(tuple(tenants))
+            del self._fused_tenant_sets[:-64]  # keep the recent evidence
 
     def _record_stage(self, task: Task, members: List[Task],
                       rule: Optional[CoalesceRule]):
@@ -576,7 +639,9 @@ class AsyncExecutor:
                                resources=task.resources,
                                priority=task.priority - 1,
                                pipeline_id=task.pipeline_id,
-                               speculative_of=task.uid)
+                               speculative_of=task.uid,
+                               stage=task.stage, band=task.band,
+                               tenant=task.tenant)
                     self.submit(dup)
 
     # -- draining ----------------------------------------------------------
@@ -603,7 +668,9 @@ class AsyncExecutor:
                 clone = Task(kind=task.kind, payload=task.payload,
                              resources=task.resources, priority=task.priority,
                              pipeline_id=task.pipeline_id,
-                             preemptible=task.preemptible)
+                             preemptible=task.preemptible,
+                             stage=task.stage, band=task.band,
+                             tenant=task.tenant)
                 clone.retries = task.retries
                 self.submit(clone)
                 requeued.append(clone)
@@ -623,7 +690,7 @@ class AsyncExecutor:
         section schema is unchanged from the hand-rolled log it replaced."""
         m = self.telemetry.metrics
         n = m.value("coalesce.dispatches")
-        return {
+        out = {
             "dispatches": int(n),
             "fused_dispatches": int(m.value("coalesce.fused_dispatches")),
             "tasks_fused": int(m.value("coalesce.tasks_fused")),
@@ -631,6 +698,18 @@ class AsyncExecutor:
             "mean_tasks_per_dispatch": (
                 m.value("coalesce.tasks") / n if n else 0.0),
         }
+        # multi-tenant evidence only when it happened — single-tenant runs
+        # keep the legacy key set byte-identical (golden schema tests)
+        xt = int(m.value("coalesce.cross_tenant_dispatches"))
+        if xt:
+            with self._lock:
+                sets = [list(s) for s in self._fused_tenant_sets]
+            out["cross_tenant"] = {
+                "dispatches": xt,
+                "tasks": int(m.value("coalesce.cross_tenant_tasks")),
+                "tenant_sets": sets,
+            }
+        return out
 
     def stage_stats(self) -> Dict[str, dict]:
         """Per-stage dispatch counters (see ``_record_stage``), with mean
@@ -705,6 +784,15 @@ class AsyncExecutor:
             if by_kind:
                 counters[name.split(".", 1)[1]] = by_kind
         out = {"kinds": kinds, "counters": counters}
+        tenants: Dict[str, dict] = {}
+        for tenant, c in m.labeled("tenant.tasks", "tenant").items():
+            tenants[tenant] = {"tasks": int(c.get())}
+        for tenant, h in m.labeled("tenant.queue_wait_s", "tenant").items():
+            tenants.setdefault(tenant, {})["queue_wait_s"] = h.summary()
+        for tenant, h in m.labeled("tenant.device_s", "tenant").items():
+            tenants.setdefault(tenant, {})["device_s"] = h.summary()
+        if tenants:  # multi-tenant gateway only — legacy schema otherwise
+            out["tenants"] = tenants
         if self.telemetry.tracer.enabled:
             out["spans"] = self.telemetry.tracer.counts()
         return out

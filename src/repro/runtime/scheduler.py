@@ -58,6 +58,22 @@ class TaskQueue:
         self.band_shares: Dict[int, float] = dict(band_shares or {})
         self._served: Dict[int, float] = {}
         self._vtime = 0.0
+        # optional admission predicate (per-tenant quota hard caps): a task
+        # it rejects is skipped by every pick path — including the aging
+        # bypass, so caps stay hard — and retried on the next pop
+        self._admit: Optional[Callable[[Task], bool]] = None
+
+    def set_admission(self, fn: Optional[Callable[[Task], bool]]):
+        """Install (or clear, with None) an admission predicate applied to
+        every dispatch pick. Unlike ``fits`` (a device-count check), the
+        predicate sees the whole task — quota policies gate on its tenant.
+        It is consulted only when the task would otherwise be popped, under
+        the queue lock, so returning True is a commitment the policy can
+        account against (reserve-at-pick). Rejected tasks stay queued and
+        are reconsidered on each pop, so admission opens up as soon as the
+        blocking condition clears."""
+        with self._lock:
+            self._admit = fn
 
     def _gauge_depths(self):
         """Refresh per-band depth gauges (call with ``_lock`` held)."""
@@ -114,6 +130,12 @@ class TaskQueue:
                     and not self._aged(task, now):
                 continue
             if fits(task.resources.n_devices):
+                # admission runs last, so admit=True implies the task IS
+                # popped — quota policies can reserve atomically here (the
+                # queue lock serializes picks); a rejected task is skipped,
+                # never blocking co-tenants' tasks behind it
+                if self._admit is not None and not self._admit(task):
+                    continue
                 return self._items.pop(i)
             if not self.backfill:
                 return None

@@ -473,6 +473,7 @@ class ImpressSession:
             raise ValueError("CampaignSpec.protocols is empty")
         if not self._populated:
             self._populate()
+        self._run_t0 = time.monotonic()
         from repro.core import payload as payload_mod
         with CompileWatcher(self.telemetry.metrics) as watcher:
             raw = self.coordinator.run(
@@ -500,6 +501,15 @@ class ImpressSession:
         """Live flat snapshot of the campaign's metrics registry — safe to
         call from another thread mid-run (serve's live metrics view)."""
         return self.telemetry.metrics.snapshot()
+
+    def partial_report(self) -> CampaignReport:
+        """Report over the campaign's *current* state, without requiring
+        ``run()`` to have finished — the Ctrl-C path in ``launch/serve``
+        emits this (plus a checkpoint) so an interrupted campaign still
+        yields the designs it accepted so far."""
+        makespan = time.monotonic() - getattr(self, "_run_t0",
+                                              time.monotonic())
+        return CampaignReport.from_raw(self.coordinator.report(makespan))
 
     # -- checkpoint / restore ----------------------------------------------
 

@@ -1,0 +1,383 @@
+"""Campaign gateway: multi-tenant multiplexing, cross-campaign coalescing,
+per-tenant quotas, bucket-table refresh, HTTP API, checkpoint/resume."""
+
+import json
+import threading
+import time
+import types
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.gateway import (GatewayError, GatewayService, QuotaManager,
+                           TenantQuota, make_server, tenant_band)
+from repro.core.pipeline import ResourceRequest, Task
+from repro.runtime.scheduler import TaskQueue
+
+jax = pytest.importorskip("jax")
+
+BINDER = {"kind": "binder", "n_cycles": 1, "n_candidates": 4,
+          "score_batch": 2}
+SPEC = {"structures": 2, "receptor_len": [24, 32], "peptide_len": 8,
+        "protocols": [BINDER], "seed": 0, "reduced": True}
+
+
+@pytest.fixture(scope="module")
+def shared_payload():
+    from repro.core import ProteinPayload
+    return ProteinPayload(jax.random.PRNGKey(0), reduced=True, length=40)
+
+
+@pytest.fixture()
+def gateway(shared_payload):
+    gw = GatewayService(payload=shared_payload, max_workers=4,
+                        quotas={"alice": TenantQuota(share=1.0),
+                                "bob": TenantQuota(share=1.0)})
+    gw.start()
+    yield gw
+    gw.shutdown()
+
+
+def _wait(gw, cid, tenant=None, timeout=180.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        rep = gw.report(cid, tenant=tenant)
+        if rep["state"] in ("COMPLETED", "CANCELED"):
+            return rep
+        time.sleep(0.1)
+    raise AssertionError(f"campaign {cid} did not finish: {rep['state']}")
+
+
+# -- cross-campaign coalescing -----------------------------------------------
+
+
+def test_cross_tenant_fusion(gateway):
+    """Two tenants' same-bucket same-stage tasks fuse into shared device
+    batches — the gateway's whole reason to exist. The coalesce evidence
+    must name members from BOTH tenants in one dispatch."""
+    a = gateway.submit_campaign(dict(SPEC), tenant="alice")
+    b = gateway.submit_campaign(dict(SPEC, seed=1), tenant="bob")
+    ra = _wait(gateway, a)
+    rb = _wait(gateway, b)
+    assert ra["trajectories"] > 0 and rb["trajectories"] > 0
+
+    stats = gateway.coalesce_stats()
+    assert "cross_tenant" in stats, "no cross-tenant dispatch ever fused"
+    xt = stats["cross_tenant"]
+    assert xt["dispatches"] >= 1
+    assert any(set(s) >= {"alice", "bob"} for s in xt["tenant_sets"]), \
+        xt["tenant_sets"]
+
+    # per-tenant telemetry sliced into each campaign's report
+    assert ra["tenant"] == "alice" and rb["tenant"] == "bob"
+    assert ra["telemetry"]["tenant"].get("tasks", 0) > 0
+    assert rb["telemetry"]["tenant"].get("tasks", 0) > 0
+    # reports are versioned and scoped: alice's events never name bob's
+    # bindings
+    assert ra["version"] >= 1
+    assert all(e.get("protocol", "").startswith(a + "/")
+               for e in ra["events"])
+
+    # gateway-wide metrics snapshot carries the same evidence
+    snap = gateway.metrics_snapshot()
+    assert snap["campaigns"][a]["tenant"] == "alice"
+    assert set(snap["tenants"]) >= {"alice", "bob"}
+
+
+def test_campaign_isolation_and_lifecycle(gateway):
+    """Tenant scoping (no cross-tenant existence oracle) and the
+    pause/resume/cancel state machine."""
+    a = gateway.submit_campaign(dict(SPEC), tenant="alice")
+    with pytest.raises(GatewayError) as ei:
+        gateway.report(a, tenant="bob")
+    assert ei.value.status == 404
+
+    gateway.pause_campaign(a, tenant="alice")
+    assert gateway.report(a)["state"] == "PAUSED"
+    with pytest.raises(GatewayError) as ei:
+        gateway.pause_campaign(a)        # double-pause is a state error
+    assert ei.value.status == 409
+    gateway.resume_campaign(a)
+    assert gateway.report(a)["state"] == "RUNNING"
+
+    gateway.cancel_campaign(a)
+    rep = _wait(gateway, a)
+    assert rep["state"] == "CANCELED"
+    gateway.cancel_campaign(a)           # idempotent once terminal
+    with pytest.raises(GatewayError) as ei:
+        gateway.resume_campaign(a)
+    assert ei.value.status == 409
+
+
+# -- quotas ------------------------------------------------------------------
+
+
+def _mk(tenant, band, n_dev=1, prio=0):
+    return Task(kind="x", payload={}, resources=ResourceRequest(n_dev),
+                priority=prio, tenant=tenant, band=band)
+
+
+def test_quota_hard_cap_and_bounded_wait_fake_clock():
+    """Deterministic fake-clock simulation of the dispatch loop: a tenant
+    flooding the queue is pinned at its device cap (reserve-at-pick makes
+    the cap exact, never best-effort) while the co-tenant's p95 queue wait
+    stays bounded — rejected flood tasks are skipped, not head-blocking."""
+    clock = {"t": 0.0}
+    qm = QuotaManager({"flood": TenantQuota(share=1.0, max_devices=2),
+                       "coop": TenantQuota(share=1.0)})
+    fb, cb = tenant_band(0, 0), tenant_band(1, 0)
+    q = TaskQueue(aging_s=1e9, now_fn=lambda: clock["t"],
+                  band_shares={fb: 1.0, cb: 1.0})
+    q.set_admission(qm.admit)
+
+    # the flood arrives first (40 tasks), the co-tenant behind it (8)
+    for i in range(40):
+        t = _mk("flood", fb)
+        t.timestamps["QUEUED"] = clock["t"]
+        q.push(t)
+    for i in range(8):
+        t = _mk("coop", cb)
+        t.timestamps["QUEUED"] = clock["t"]
+        q.push(t)
+
+    total_devices, free = 4, 4
+    inflight = []   # (finish_time, task, sub)
+    waits = {"flood": [], "coop": []}
+    while len(q) or inflight:
+        # retire whatever finished by now
+        for ft, task, sub in list(inflight):
+            if ft <= clock["t"]:
+                inflight.remove((ft, task, sub))
+                qm.released(task, sub)
+                free += sub.n_devices
+        # drain every admissible fitting task at this instant
+        while True:
+            task = q.pop_fitting(lambda n: n <= free)
+            if task is None:
+                break
+            sub = types.SimpleNamespace(n_devices=task.resources.n_devices)
+            qm.granted(task, sub)
+            free -= sub.n_devices
+            waits[task.tenant].append(
+                clock["t"] - task.timestamps["QUEUED"])
+            inflight.append((clock["t"] + 1.0, task, sub))
+        held = sum(s.n_devices for _, t, s in inflight
+                   if t.tenant == "flood")
+        assert held <= 2, "flood tenant exceeded its device cap"
+        clock["t"] += 1.0
+
+    stats = qm.stats()
+    assert stats["flood"]["peak_held"] <= 2
+    assert stats["flood"]["rejections"] > 0       # the cap actually bit
+    assert stats["coop"]["held"] == 0 and stats["flood"]["held"] == 0
+    assert len(waits["coop"]) == 8
+    # co-tenant p95 wait: with 2 of 4 devices always free of the flood,
+    # 8 unit-length coop tasks clear in <= 4 ticks — far below the ~20
+    # ticks they'd wait if the flood's 40 queued tasks head-blocked them
+    p95 = sorted(waits["coop"])[int(0.95 * len(waits["coop"]))]
+    assert p95 <= 4.0, waits["coop"]
+    assert max(waits["coop"]) < min(10.0, max(waits["flood"]))
+
+
+def test_quota_admission_refund_on_denied_allocation():
+    """admit() reserves; denied() must refund, or a racing allocation
+    failure would leak reserved devices until the cap wedges shut."""
+    qm = QuotaManager({"a": TenantQuota(max_devices=2)})
+    t1, t2 = _mk("a", 0, n_dev=2), _mk("a", 0, n_dev=2)
+    assert qm.admit(t1)
+    assert not qm.admit(t2)              # cap reached by the reservation
+    qm.denied(t1)                        # allocation raced out -> refund
+    assert qm.admit(t2)                  # headroom restored
+    sub = types.SimpleNamespace(n_devices=2)
+    qm.granted(t2, sub)
+    qm.released(t2, sub)
+    assert qm.stats()["a"]["held"] == 0
+
+
+# -- bucket-table refresh ----------------------------------------------------
+
+
+def test_stream_structures_refreshes_bucket_table(shared_payload):
+    """Streaming novel-length structures into a RUNNING campaign extends
+    the bucket table (new grid edges only), bumps its version, and leaves
+    the original pipelines' results bit-identical to an unstreamed control
+    run — in-flight work keeps its buckets."""
+    def run(stream):
+        gw = GatewayService(payload=shared_payload, max_workers=4)
+        gw.start()
+        try:
+            cid = gw.submit_campaign(dict(SPEC), tenant="alice")
+            before = set(gw.report(cid)["bucket_table"])
+            out = None
+            if stream:
+                out = gw.stream_structures(
+                    cid, {"structures": 1, "receptor_len": 56, "seed": 9})
+            rep = _wait(gw, cid)
+            return before, out, rep
+        finally:
+            gw.shutdown()
+
+    before, _, control = run(stream=False)
+    before2, out, streamed = run(stream=True)
+    assert before == before2
+
+    assert out["bucket_table_refreshed"] is True
+    assert out["bucket_table_version"] == 1
+    after = set(out["bucket_table"])
+    assert after > before                 # extension only: old edges kept
+    assert 64 in after                    # 56 and 56+8 snap to grid edge 64
+    assert streamed["bucket_table_version"] == 1
+
+    # original pipelines (no s1/ stream prefix) are bit-identical to the
+    # control run: the refresh never perturbed in-flight work
+    def core(rep):
+        return {n: [(h["cycle"], round(h["fitness"], 9), h["sequence"])
+                    for h in pl["history"]]
+                for n, pl in rep["pipelines"].items()
+                if not n.startswith("s1/")}
+    assert core(streamed) == core(control)
+    # ... and the streamed pipeline ran to a decision too
+    extra = [n for n in streamed["pipelines"] if n.startswith("s1/")]
+    assert extra and all(streamed["pipelines"][n]["history"]
+                         for n in extra)
+
+
+def test_homogeneous_campaign_rejects_novel_length(gateway):
+    """Exact-length campaigns are bit-frozen by design: streaming a novel
+    length must be refused loudly, not silently retraced."""
+    cid = gateway.submit_campaign(
+        dict(SPEC, receptor_len=24, structures=1), tenant="alice")
+    with pytest.raises(GatewayError) as ei:
+        gateway.stream_structures(cid, {"structures": 1,
+                                        "receptor_len": 56})
+    assert ei.value.status == 409
+    assert "exact-length" in str(ei.value)
+    # same lengths are always welcome
+    out = gateway.stream_structures(cid, {"structures": 1,
+                                          "receptor_len": 24})
+    assert out["added"] == 1 and out["bucket_table_refreshed"] is False
+
+
+# -- HTTP API ----------------------------------------------------------------
+
+
+def _req(base, method, path, tok=None, body=None):
+    data = json.dumps(body).encode() if body is not None else None
+    headers = {"Content-Type": "application/json"}
+    if tok:
+        headers["Authorization"] = f"Bearer {tok}"
+    r = urllib.request.Request(base + path, data=data, method=method,
+                               headers=headers)
+    try:
+        with urllib.request.urlopen(r) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_http_api_end_to_end(shared_payload):
+    """The full wire surface: token auth, tenant-scoped 404, lifecycle
+    verbs, report polling, structure streaming, metrics."""
+    gw = GatewayService(payload=shared_payload, max_workers=4)
+    gw.start()
+    srv = make_server(gw, tokens={"tok-a": "alice", "tok-b": "bob"})
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    base = "http://%s:%d" % srv.server_address[:2]
+    try:
+        s, e = _req(base, "GET", "/metrics")
+        assert s == 401                               # no token
+        s, e = _req(base, "GET", "/metrics", tok="nope")
+        assert s == 401                               # unknown token
+        s, r = _req(base, "POST", "/campaigns", tok="tok-a",
+                    body=dict(SPEC, structures=1))
+        assert s == 201
+        cid = r["id"]
+        s, _ = _req(base, "GET", f"/campaigns/{cid}/report", tok="tok-b")
+        assert s == 404                               # not bob's campaign
+        s, r = _req(base, "POST", f"/campaigns/{cid}/pause", tok="tok-a")
+        assert (s, r["state"]) == (200, "PAUSED")
+        s, r = _req(base, "POST", f"/campaigns/{cid}/structures",
+                    tok="tok-a", body={"structures": 1, "seed": 3})
+        assert s == 200 and r["added"] == 1
+        s, r = _req(base, "POST", f"/campaigns/{cid}/resume", tok="tok-a")
+        assert (s, r["state"]) == (200, "RUNNING")
+        s, r = _req(base, "GET", "/campaigns", tok="tok-a")
+        assert [c["id"] for c in r["campaigns"]] == [cid]
+        s, r = _req(base, "GET", "/campaigns", tok="tok-b")
+        assert r["campaigns"] == []
+
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            s, rep = _req(base, "GET", f"/campaigns/{cid}/report",
+                          tok="tok-a")
+            if rep["state"] == "COMPLETED":
+                break
+            time.sleep(0.2)
+        assert rep["state"] == "COMPLETED" and rep["trajectories"] > 0
+
+        s, ck = _req(base, "POST", f"/campaigns/{cid}/checkpoint",
+                     tok="tok-a")
+        assert s == 200 and set(ck) >= {"schema_version", "spec",
+                                        "coordinator"}
+        s, m = _req(base, "GET", "/metrics", tok="tok-a")
+        assert s == 200 and "quotas" in m and "coalesce" in m
+        s, e = _req(base, "POST", "/campaigns", tok="tok-a",
+                    body={"protocols": [{"kind": "not-a-kind"}]})
+        assert s == 400
+        s, e = _req(base, "GET", "/nope", tok="tok-a")
+        assert s == 404
+    finally:
+        srv.shutdown()
+        gw.shutdown()
+
+
+# -- checkpoint / resume -----------------------------------------------------
+
+
+def test_gateway_checkpoint_resume(shared_payload):
+    """shutdown() checkpoints live campaigns in the session-compatible
+    schema; a fresh gateway resumes one mid-flight and completes it."""
+    gw = GatewayService(payload=shared_payload, max_workers=4)
+    gw.start()
+    cid = gw.submit_campaign(dict(SPEC), tenant="alice")
+    gw.pause_campaign(cid)
+    checkpoints = gw.shutdown()
+    assert set(checkpoints) == {cid}
+    ck = json.loads(json.dumps(checkpoints[cid]))   # wire-serializable
+    assert ck["schema_version"] == 1
+    # binding names are de-prefixed: standalone session schema
+    assert set(ck["coordinator"]["protocols"]) == {"binder"}
+    assert all(not p["protocol"].startswith(cid)
+               for p in ck["coordinator"]["pipelines"])
+
+    gw2 = GatewayService(payload=shared_payload, max_workers=4)
+    gw2.start()
+    try:
+        cid2 = gw2.submit_campaign(ck["spec"], tenant="alice", state=ck)
+        rep = _wait(gw2, cid2)
+        assert rep["state"] == "COMPLETED"
+        assert rep["trajectories"] > 0
+        assert all(pl["history"] for pl in rep["pipelines"].values())
+    finally:
+        gw2.shutdown()
+
+
+def test_gateway_checkpoint_loads_in_session(shared_payload):
+    """The same checkpoint restores through ImpressSession.from_checkpoint
+    — gateway campaigns are portable back to the single-campaign facade."""
+    from repro.session import ImpressSession
+
+    gw = GatewayService(payload=shared_payload, max_workers=4)
+    gw.start()
+    cid = gw.submit_campaign(dict(SPEC), tenant="alice")
+    gw.pause_campaign(cid)
+    ck = gw.shutdown()[cid]
+
+    sess = ImpressSession.from_checkpoint(ck, payload=shared_payload)
+    try:
+        assert len(sess.coordinator.pipelines) == 2
+        rep = sess.run()
+        assert rep.trajectories > 0
+    finally:
+        sess.shutdown()

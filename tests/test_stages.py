@@ -420,3 +420,57 @@ def test_binder_composition_independent_of_cotenants(shared_payload):
     fold = rep["stages"]["fold"]
     assert fold["tasks"] > fold["dispatches"]   # cross-protocol fusion
     assert rep["protocols"]["rescore"]["n_pipelines"] == 2
+
+
+def test_binder_resume_mid_stage_bit_identical(shared_payload):
+    """Satellite: a binder campaign checkpointed *mid-cycle* — with fold
+    tasks inflight — resumes through ``ImpressSession.from_checkpoint`` at
+    the exact stage it stopped at (the ``stage_cursor``), not at a redone
+    backbone stage (whose route handler mutates ``meta["backbone"]``, so
+    redoing it would fork the trajectory), and the continuation's accepted
+    designs are bit-identical to an uninterrupted run."""
+    import json
+    import time
+
+    def histories(sess):
+        return {p.name: [(h["cycle"], round(h["fitness"], 9), h["sequence"])
+                         for h in p.history]
+                for p in sess.coordinator.pipelines.values()}
+
+    spec = CampaignSpec(structures=2, receptor_len=24, protocols=(BINDER,),
+                        seed=0, reduced=True)
+    with ImpressSession(spec, payload=shared_payload) as sess:
+        sess.run(timeout=300)
+        baseline = histories(sess)
+    assert baseline and all(len(h) == 2 for h in baseline.values())
+
+    # interrupted run: step the coordinator until some pipeline sits
+    # mid-cycle with its fold task inflight, then checkpoint and kill it
+    sess = ImpressSession(spec, payload=shared_payload)
+    try:
+        sess._populate()
+        coord = sess.coordinator
+
+        def mid_fold():
+            return [p for p in coord.pipelines.values() if p.active
+                    and p.meta.get("stage_cursor") == "predict_batch"]
+
+        deadline = time.monotonic() + 240
+        while time.monotonic() < deadline and not mid_fold():
+            if not coord.step():
+                break
+        assert mid_fold(), "campaign finished before a mid-fold snapshot"
+        state = json.loads(json.dumps(sess.checkpoint()))  # survives JSON
+    finally:
+        sess.shutdown()
+
+    resumed = ImpressSession.from_checkpoint(state, payload=shared_payload)
+    try:
+        cursors = [p.meta.get("stage_cursor")
+                   for p in resumed.coordinator.pipelines.values()
+                   if p.active]
+        assert "predict_batch" in cursors   # restored mid-stage, not reset
+        resumed.run(timeout=300)
+        assert histories(resumed) == baseline
+    finally:
+        resumed.shutdown()

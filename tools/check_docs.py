@@ -39,12 +39,15 @@ ARCH_SECTIONS = [
     "Model evolution",
     "Heterogeneous stages & fair scheduling",
     "Telemetry & tracing",
+    "Campaign gateway",
     "Adding a new task kind",
 ]
 
 # campaign-API modules every doc must reference by name: the facade and
 # the DesignProtocol interface are the public surface of the repo
-API_MODULES = ["session.py", "core/api.py", "core/stages.py"]
+API_MODULES = ["session.py", "core/api.py", "core/stages.py",
+               "gateway/service.py", "gateway/quotas.py",
+               "gateway/server.py"]
 
 
 def repro_packages():
