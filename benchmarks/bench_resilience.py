@@ -1,0 +1,147 @@
+"""Resilience benchmark: goodput under faults, with and without retry.
+
+Runs the chaos harness's three-protocol campaign in three modes, each in
+its own subprocess (pipeline uids seed the sampling streams, so every
+mode needs a fresh uid counter):
+
+* ``control``   — fault-free baseline;
+* ``resilient`` — the deterministic chaos schedule (two transient
+  payload faults, one device loss, one poison row) with the full retry
+  taxonomy: transients retry with backoff, the poison row quarantines;
+* ``no-retry``  — the same schedule with ``max_transient_retries=0``:
+  every fault fails its pipeline fast, measuring what the resilience
+  layer buys.
+
+Goodput is accepted designs per wall-clock second, excluding the
+quarantined pipeline from both sides of each ratio so the comparison is
+retry-vs-no-retry rather than quarantine-vs-quarantine. The headline
+numbers are ``resilient/control`` (the acceptance criterion: faults
+should cost well under half the throughput) and ``no_retry/control``
+(how much of the campaign a fail-fast policy forfeits).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_resilience.py [--smoke] \
+        [--json BENCH_resilience.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_HARNESS = os.path.join(_ROOT, "tools", "check_resilience.py")
+
+
+def _spawn(role: str, max_retries=None, timeout: float = 300.0) -> dict:
+    """Run one campaign child via the chaos harness; return its evidence."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        out = tf.name
+    cmd = [sys.executable, _HARNESS, "--role", role, "--out", out,
+           "--timeout", str(timeout)]
+    if max_retries is not None:
+        cmd += ["--max-retries", str(max_retries)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    t0 = time.monotonic()
+    proc = subprocess.run(cmd, env=env, timeout=timeout + 120)
+    wall = time.monotonic() - t0
+    if proc.returncode != 0:
+        raise SystemExit(f"bench child {role} (max_retries={max_retries}) "
+                         f"failed with rc={proc.returncode}")
+    with open(out) as f:
+        data = json.load(f)
+    os.unlink(out)
+    data["wall_s"] = wall
+    return data
+
+
+def _quarantined(data: dict):
+    for rec in data.get("resilience", {}).get("deadletter", []):
+        if "poison" in (rec.get("error") or ""):
+            return rec.get("pipeline")
+    return None
+
+
+def _goodput(data: dict, exclude=()) -> float:
+    accepted = sum(len(h) for name, h in data["histories"].items()
+                   if name not in exclude)
+    return accepted / max(data["elapsed_s"], 1e-9)
+
+
+def main(log=print, argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: same campaign, shorter child timeout")
+    ap.add_argument("--json", metavar="P", default=None,
+                    help="write the BENCH record to P")
+    args = ap.parse_args(argv)
+    timeout = 180.0 if args.smoke else 300.0
+
+    log("bench_resilience: 3-protocol campaign, 3 modes "
+        "(control / chaos+retry / chaos+no-retry), subprocess-isolated")
+
+    control = _spawn("control", timeout=timeout)
+    resilient = _spawn("chaos", timeout=timeout)
+    no_retry = _spawn("chaos", max_retries=0, timeout=timeout)
+
+    quarantined = _quarantined(resilient)
+    exclude = {quarantined} if quarantined else set()
+
+    rows = []
+    for name, data in (("control", control), ("resilient", resilient),
+                       ("no_retry", no_retry)):
+        res = data.get("resilience", {})
+        rows.append({
+            "mode": name,
+            "accepted": sum(len(h) for h in data["histories"].values()),
+            "accepted_excl_quarantine": sum(
+                len(h) for n, h in data["histories"].items()
+                if n not in exclude),
+            "elapsed_s": round(data["elapsed_s"], 2),
+            "goodput_per_s": round(_goodput(data, exclude), 3),
+            "retries": res.get("retries", 0),
+            "deadletter": len(res.get("deadletter", [])),
+        })
+
+    ctl = _goodput(control, exclude)
+    ratio_resilient = _goodput(resilient, exclude) / max(ctl, 1e-9)
+    ratio_no_retry = _goodput(no_retry, exclude) / max(ctl, 1e-9)
+
+    hdr = (f"{'mode':<10} {'accepted':>8} {'excl-q':>6} {'elapsed_s':>9} "
+           f"{'goodput/s':>9} {'retries':>7} {'deadletter':>10}")
+    log(hdr)
+    log("-" * len(hdr))
+    for r in rows:
+        log(f"{r['mode']:<10} {r['accepted']:>8} "
+            f"{r['accepted_excl_quarantine']:>6} {r['elapsed_s']:>9.2f} "
+            f"{r['goodput_per_s']:>9.3f} {r['retries']:>7} "
+            f"{r['deadletter']:>10}")
+    log(f"goodput ratio vs control: resilient {ratio_resilient:.3f}, "
+        f"no-retry {ratio_no_retry:.3f} (quarantined: {quarantined})")
+
+    record = {
+        "bench": "resilience",
+        "schema": 1,
+        "smoke": bool(args.smoke),
+        "quarantined": quarantined,
+        "goodput_ratio_resilient": round(ratio_resilient, 3),
+        "goodput_ratio_no_retry": round(ratio_no_retry, 3),
+        "modes": rows,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        log(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 table, plus the throughput benchmarks for the two batched hot stages.
 Prints ``name,us_per_call,derived`` CSV lines; the ``scoring``,
-``generate``, ``pipeline`` and ``gateway`` entries additionally write
-machine-readable ``BENCH_scoring.json`` / ``BENCH_generate.json`` /
-``BENCH_pipeline.json`` / ``BENCH_gateway.json`` records (candidates/sec,
-occupancy, speedup vs baseline, per-stage and per-tenant waits) — the
-repo's perf trajectory across PRs.
+``generate``, ``pipeline``, ``gateway`` and ``resilience`` entries
+additionally write machine-readable ``BENCH_scoring.json`` /
+``BENCH_generate.json`` / ``BENCH_pipeline.json`` /
+``BENCH_gateway.json`` / ``BENCH_resilience.json`` records
+(candidates/sec, occupancy, speedup vs baseline, per-stage and
+per-tenant waits, goodput under faults) — the repo's perf trajectory
+across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,scoring,...]
 """
@@ -19,7 +21,7 @@ def emit(name, us_per_call, derived):
 
 
 BENCHES = ("roofline", "table1", "fig2", "fig45", "fig3", "evolution",
-           "scoring", "generate", "pipeline", "gateway")
+           "scoring", "generate", "pipeline", "gateway", "resilience")
 
 
 def main() -> None:
@@ -67,6 +69,10 @@ def main() -> None:
     if "gateway" in only:
         from benchmarks import bench_gateway
         bench_gateway.main(print, argv=["--json", "BENCH_gateway.json"])
+    if "resilience" in only:
+        from benchmarks import bench_resilience
+        bench_resilience.main(print,
+                              argv=["--json", "BENCH_resilience.json"])
     emit("benchmarks.total_wall_s", (time.time() - t0) * 1e6,
          round(time.time() - t0, 1))
 

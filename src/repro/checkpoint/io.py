@@ -1,20 +1,35 @@
 """Sharded pytree checkpoint I/O: one .npz of path-keyed leaves plus a
-msgpack manifest (treedef, shapes, dtypes). On a real multi-host pod each
-process writes only its addressable shards (``shard_suffix``); restore
-reassembles and re-shards via ``jax.device_put`` with the target sharding.
+msgpack manifest (treedef, shapes, dtypes, per-array crc32 checksums). On a
+real multi-host pod each process writes only its addressable shards
+(``shard_suffix``); restore reassembles and re-shards via
+``jax.device_put`` with the target sharding.
+
+Durability: both the .npz and the manifest are written atomically
+(tempfile + ``os.replace``), the manifest carries a crc32 per array, and
+``load_pytree`` verifies every array it reads against the manifest —
+raising :class:`CheckpointCorruptError` on mismatch so callers (the
+``CheckpointManager``) can fall back to an older retained copy instead of
+restoring silently-corrupted state. ``verify_checkpoint`` runs the same
+check without materializing the tree. An optional ``fault_plan``
+(``repro.resilience.FaultPlan``) corrupts the just-written file on a
+deterministic schedule — the CI chaos path for this machinery.
 """
 
 from __future__ import annotations
 
-import io
 import json
 import os
 import tempfile
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed its checksum (or could not be decoded)."""
 
 
 def _flatten(tree):
@@ -27,7 +42,18 @@ def _flatten(tree):
     return out
 
 
-def save_pytree(tree, path, *, step=None, shard_suffix=""):
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _atomic_write(path, data: bytes):
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    with os.fdopen(fd, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def save_pytree(tree, path, *, step=None, shard_suffix="", fault_plan=None):
     """Atomically write tree to ``path`` (.npz + .manifest)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves = _flatten(tree)
@@ -37,6 +63,7 @@ def save_pytree(tree, path, *, step=None, shard_suffix=""):
         "keys": sorted(arrays),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "checksums": {k: _crc(v) for k, v in arrays.items()},
         "treedef": json.dumps(jax.tree_util.tree_structure(tree),
                               default=str),
     }
@@ -45,17 +72,50 @@ def save_pytree(tree, path, *, step=None, shard_suffix=""):
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **arrays)
     os.replace(tmp, npz_path)
-    with open(path + ".manifest", "wb") as f:
-        f.write(msgpack.packb(manifest))
+    _atomic_write(path + ".manifest", msgpack.packb(manifest))
+    if fault_plan is not None:
+        fault_plan.on_checkpoint_saved(npz_path)
     return npz_path
 
 
-def load_pytree(template, path, *, shard_suffix="", shardings=None):
+def _load_manifest(path):
+    try:
+        with open(path + ".manifest", "rb") as f:
+            return msgpack.unpackb(f.read())
+    except FileNotFoundError:
+        return None
+    except Exception as e:  # truncated/garbled msgpack
+        raise CheckpointCorruptError(
+            f"manifest unreadable: {path}.manifest ({e!r})") from e
+
+
+def load_pytree(template, path, *, shard_suffix="", shardings=None,
+                verify=True):
     """Load into the structure of ``template`` (a pytree of arrays or
     ShapeDtypeStructs). If ``shardings`` (matching pytree of NamedSharding)
-    is given, leaves are device_put with those shardings."""
-    with np.load(path + shard_suffix + ".npz") as data:
-        arrays = {k: data[k] for k in data.files}
+    is given, leaves are device_put with those shardings. With ``verify``
+    (the default), every array read is checked against the manifest's
+    crc32 — legacy manifests without checksums load unchecked."""
+    checksums = {}
+    if verify:
+        manifest = _load_manifest(path)
+        if manifest is not None:
+            checksums = manifest.get("checksums") or {}
+    try:
+        with np.load(path + shard_suffix + ".npz") as data:
+            arrays = {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # zip/npy decode failure = corrupted bytes
+        raise CheckpointCorruptError(
+            f"checkpoint unreadable: {path}{shard_suffix}.npz "
+            f"({e!r})") from e
+    for k, arr in arrays.items():
+        want = checksums.get(k)
+        if want is not None and _crc(arr) != want:
+            raise CheckpointCorruptError(
+                f"checksum mismatch for array {k!r} in "
+                f"{path}{shard_suffix}.npz")
     flat_t = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     shard_flat = (jax.tree.leaves(shardings)
@@ -63,7 +123,12 @@ def load_pytree(template, path, *, shard_suffix="", shardings=None):
     for (pathk, leaf), shd in zip(flat_t[0], shard_flat):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pathk)
-        arr = arrays[key]
+        try:
+            arr = arrays[key]
+        except KeyError as e:
+            raise CheckpointCorruptError(
+                f"array {key!r} missing from "
+                f"{path}{shard_suffix}.npz") from e
         if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
             tgt = np.dtype(leaf.dtype)
             if arr.dtype.kind == "V" and arr.dtype.itemsize == tgt.itemsize:
@@ -77,6 +142,25 @@ def load_pytree(template, path, *, shard_suffix="", shardings=None):
             arr = jnp.asarray(arr)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(flat_t[1], leaves)
+
+
+def verify_checkpoint(path, *, shard_suffix="") -> bool:
+    """True when every array in ``path``'s .npz matches its manifest
+    checksum (legacy checkpoints without checksums pass vacuously if the
+    npz decodes). False on any corruption."""
+    try:
+        manifest = _load_manifest(path)
+        checksums = (manifest.get("checksums") or {}) if manifest else {}
+        with np.load(path + shard_suffix + ".npz") as data:
+            for k in data.files:
+                want = checksums.get(k)
+                if want is not None and _crc(data[k]) != want:
+                    return False
+        return True
+    except FileNotFoundError:
+        raise
+    except Exception:
+        return False
 
 
 def manifest_step(path):

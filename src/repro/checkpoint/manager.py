@@ -17,7 +17,8 @@ import time
 
 import jax
 
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import (CheckpointCorruptError, load_pytree,
+                                 save_pytree)
 
 
 class CheckpointManager:
@@ -87,14 +88,36 @@ class CheckpointManager:
         with open(p) as f:
             return json.load(f)["step"]
 
-    def restore(self, template, step=None, *, shardings=None):
+    def restore(self, template, step=None, *, shardings=None,
+                fallback=True):
+        """Restore the requested (default: latest) step. Every array is
+        checksum-verified against its manifest; with ``fallback`` (the
+        default) a corrupted checkpoint falls back to the next-oldest
+        retained step instead of failing the restart — the returned step
+        tells the caller which copy actually loaded. Raises
+        ``CheckpointCorruptError`` only when every retained copy is bad."""
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None, None
-        base = self._base(step)
-        state = load_pytree(template, base, shardings=shardings)
-        extra = None
-        if os.path.exists(base + ".extra.json"):
-            with open(base + ".extra.json") as f:
-                extra = json.load(f)
-        return state, extra, step
+        candidates = [step]
+        if fallback:
+            candidates += [s for s in sorted(self.all_steps(), reverse=True)
+                           if s < step]
+        last_err = None
+        for s in candidates:
+            base = self._base(s)
+            try:
+                state = load_pytree(template, base, shardings=shardings)
+            except CheckpointCorruptError as e:
+                last_err = e
+                print(f"[checkpoint] step {s} failed verification "
+                      f"({e}); falling back to an older copy", flush=True)
+                continue
+            extra = None
+            if os.path.exists(base + ".extra.json"):
+                with open(base + ".extra.json") as f:
+                    extra = json.load(f)
+            return state, extra, s
+        raise CheckpointCorruptError(
+            f"no intact checkpoint among steps {candidates}"
+        ) from last_err

@@ -6,7 +6,7 @@
 # device payload functions (payload.py). The execution runtime lives in
 # repro.runtime; the declarative session facade in repro.session.
 from repro.core.api import Decision, DesignProtocol
-from repro.core.coordinator import Coordinator
+from repro.core.coordinator import Coordinator, ProtocolCrash
 from repro.core.multi_objective import (MultiObjectiveConfig,
                                         MultiObjectiveProtocol)
 from repro.core.payload import ProteinPayload
@@ -16,7 +16,7 @@ from repro.core.stages import (BinderConfig, RescoreConfig, RescoreProtocol,
                                StagedBinderProtocol, StageSpec,
                                default_binder_stages)
 
-__all__ = ["Decision", "DesignProtocol", "Coordinator",
+__all__ = ["Decision", "DesignProtocol", "Coordinator", "ProtocolCrash",
            "MultiObjectiveConfig", "MultiObjectiveProtocol",
            "ProteinPayload", "Pipeline", "ResourceRequest",
            "Task", "TaskState", "ImpressProtocol", "ProtocolConfig",

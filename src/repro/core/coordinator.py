@@ -52,6 +52,21 @@ from repro.core.pipeline import Pipeline, Task, TaskState
 from repro.runtime.executor import AsyncExecutor
 
 
+class ProtocolCrash(RuntimeError):
+    """A protocol handler raised while routing a completion, with crash
+    isolation on (``Coordinator.crash_isolation``, set by long-lived
+    multiplexers like the gateway). Carries the binding name so the
+    supervisor can fail/restart just that campaign; without isolation the
+    original exception propagates unchanged (standalone scripts keep
+    their tracebacks)."""
+
+    def __init__(self, binding: str, cause: BaseException):
+        super().__init__(f"protocol handler crashed "
+                         f"(binding {binding!r}): {cause!r}")
+        self.binding = binding
+        self.cause = cause
+
+
 class _ProtocolBinding:
     """One registered protocol: its inflight budget, submission buffer, and
     parked sub-pipeline proposals."""
@@ -141,6 +156,34 @@ class Coordinator:
         b.ready = []
         b.parked = []
 
+    def evict_pipelines(self, name: str):
+        """Drop the named binding's pipelines from the registry. The
+        gateway's restart path calls this between ``cancel_protocol`` and
+        a checkpoint restore: the restored pipelines replace the canceled
+        ones, and stale twins left behind would double-count history in
+        every later report."""
+        b = self._by_name[name]
+        for pl in self._binding_pipelines(b):
+            self.pipelines.pop(pl.uid, None)
+            self._pipeline_binding.pop(pl.uid, None)
+
+    def remove_protocol(self, name: str) -> bool:
+        """Unregister an idle binding and drop its pipelines (gateway
+        campaign GC). Refuses — returns False — while tasks are inflight,
+        because late completions must still route and decrement through
+        the binding; call again once the work drains. Unknown names
+        return True (already gone), so retried sweeps converge."""
+        b = self._by_name.get(name)
+        if b is None:
+            return True
+        if b.inflight:
+            return False
+        self.cancel_protocol(name)
+        self.evict_pipelines(name)
+        self._bindings.remove(b)
+        del self._by_name[name]
+        return True
+
     @property
     def protocol(self) -> Optional[DesignProtocol]:
         """The default (first-registered) protocol — legacy accessor."""
@@ -171,6 +214,12 @@ class Coordinator:
     # with their binding even while only one binding is registered yet —
     # campaign-sliced event streams must not depend on arrival order
     always_tag_events = False
+
+    # crash isolation (the gateway's supervisor): when set, a protocol
+    # handler exception surfaces as ProtocolCrash(binding) so the drive
+    # loop can fail/restart that one campaign; off (the default), the
+    # original exception propagates to the standalone caller unchanged
+    crash_isolation = False
 
     def _event_tag(self, binding: Optional[_ProtocolBinding]) -> dict:
         """Events carry the protocol name only in multi-protocol campaigns
@@ -269,6 +318,13 @@ class Coordinator:
     def _handle(self, task: Task):
         self._record_occupancy(task)
         pl = self.pipelines.get(self._task_pipeline.get(task.uid, -1))
+        if pl is None and task.pipeline_id is not None:
+            # executor-created replacement (a device-loss clone carries a
+            # fresh uid the coordinator never enqueued): route it by the
+            # pipeline id it inherited, so the completion still advances
+            # its pipeline instead of being dropped (which wedged the
+            # campaign: an active pipeline with nothing inflight)
+            pl = self.pipelines.get(task.pipeline_id)
         if task.speculative_of is not None:
             # speculative duplicate: only count if the original hasn't won
             if task.speculative_of in self._done_task_uids \
@@ -294,7 +350,15 @@ class Coordinator:
                 {"t": time.monotonic(), "event": task.state.value,
                  "task": task.kind, "error": task.error},
                 **self._event_tag(binding)))
-            if pl is not None and task.state == TaskState.FAILED:
+            if pl is not None and task.state == TaskState.FAILED \
+                    and (not task.canceled
+                         or getattr(task, "_deadline_exceeded", False)):
+                # graceful degradation: a genuine failure deactivates just
+                # this pipeline (the campaign's other trajectories keep
+                # going). A canceled victim surfacing as FAILED (its
+                # payload noticed the device-loss cancel and raised) does
+                # NOT — its executor-made clone is still inflight and will
+                # advance the pipeline; deadline kills do (the run hung)
                 pl.active = False
             return
         self._done_task_uids.add(task.uid)
@@ -307,7 +371,12 @@ class Coordinator:
                  "task": task.kind, "pipeline": pl.name},
                 **self._event_tag(binding)))
             return
-        decision = handler(pl, task.result)
+        try:
+            decision = handler(pl, task.result)
+        except Exception as e:  # noqa: BLE001 — protocol code is untrusted
+            if not self.crash_isolation:
+                raise
+            raise ProtocolCrash(binding.name, e) from e
         if not isinstance(decision, Decision):   # bare task-list shorthand
             decision = Decision(tasks=list(decision))
         for ev in decision.events:
@@ -351,10 +420,14 @@ class Coordinator:
             self.trainer.on_complete(task)
             return True
         if task.speculative_of is None:
-            self._inflight -= 1
             b = self._task_binding.get(task.uid)
             if b is not None:
                 b.inflight -= 1
+                self._inflight -= 1
+            # else: an executor-created replacement (device-loss clone)
+            # the coordinator never enqueued — its original's CANCELED
+            # completion owns the inflight decrement, so decrementing here
+            # too would double-count and leave _inflight negative forever
         self._handle(task)
         self._pump()
         self._drain_parked()
@@ -438,6 +511,19 @@ class Coordinator:
         b = self._task_binding.get(task.uid)
         return b.name if b is not None else None
 
+    def _resilience_report(self) -> dict:
+        """``report()["resilience"]``: the executor's retry / breaker /
+        quarantine evidence, with dead-letter pipeline ids resolved to
+        pipeline names (the executor only knows uids)."""
+        if not hasattr(self.executor, "resilience_summary"):
+            return {}
+        res = self.executor.resilience_summary()
+        for rec in res.get("deadletter", []):
+            pl = self.pipelines.get(rec.get("pipeline_id"))
+            if pl is not None:
+                rec["pipeline"] = pl.name
+        return res
+
     def report(self, makespan: float) -> dict:
         pls = list(self.pipelines.values())
         per_protocol = {}
@@ -473,6 +559,9 @@ class Coordinator:
             "telemetry": (self.executor.telemetry_summary()
                           if hasattr(self.executor, "telemetry_summary")
                           else {}),
+            # retry taxonomy / breaker / dead-letter quarantine evidence
+            # (repro.resilience); {} for executors without the substrate
+            "resilience": self._resilience_report(),
             "evolution": (None if self.trainer is None else
                           self.trainer.report(
                               makespan=makespan,

@@ -74,6 +74,10 @@ class Task:
     #   queue-wait/device-time metrics by it, and quota policies charge the
     #   dispatch leader's tenant for the devices a grant holds. None (the
     #   single-tenant scripts) changes nothing anywhere
+    not_before: float = 0.0     # retry backoff: the scheduler skips this
+    #   task (without blocking tasks behind it) until the executor clock
+    #   passes this stamp — retries wait out their backoff in the queue
+    #   instead of busy-requeueing. 0.0 (the default) = always eligible
     trace: Optional[Dict[str, Any]] = None  # lifecycle trace record, owned
     #   by the executor's ``obs.Tracer`` when span tracing is on: event
     #   chain, fused-dispatch links, protocol binding — see obs/trace.py.

@@ -14,6 +14,8 @@ framework enters the dependency set. The API surface:
     POST /campaigns/{id}/checkpoint       campaign checkpoint (session-
                                           compatible schema)
     GET  /metrics                         gateway-wide metrics snapshot
+    GET  /healthz                         liveness probe (no auth: load
+                                          balancers carry no tokens)
 
 Auth is token-per-tenant: construct with ``tokens={"s3cret": "alice"}``
 and every request must carry ``Authorization: Bearer <token>``; the token
@@ -80,6 +82,12 @@ class _Handler(BaseHTTPRequestHandler):
             raise GatewayError(400, "request body is not valid JSON")
 
     def _dispatch(self, method: str):
+        path = self.path.split("?", 1)[0].rstrip("/")
+        if method == "GET" and path == "/healthz":
+            # liveness must not depend on auth — probes carry no tokens —
+            # so this short-circuits before tenant resolution can 401
+            self._send(200, self.gateway.health())
+            return
         tenant = self._tenant()
         if tenant is None:
             return

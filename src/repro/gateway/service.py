@@ -40,6 +40,21 @@ control operation (submit / pause / resume / cancel / stream / report /
 checkpoint) takes the service lock, which the drive thread holds only for
 one bounded ``Coordinator.step``. The coordinator itself is never touched
 off-lock.
+
+Resilience (PR 10): the gateway is the long-lived deployment surface, so
+it owns the crash-safety story. ``checkpoint_every_s`` auto-checkpoints
+every RUNNING campaign on the drive thread; on-disk copies are
+crc-enveloped ``campaign-<id>.json`` files with a ``.1`` previous-copy
+rotation, verified on read with fallback. The drive loop runs with
+``Coordinator.crash_isolation`` on: a protocol handler exception surfaces
+as ``ProtocolCrash`` and the supervisor restarts just that campaign from
+its last auto-checkpoint (up to ``max_restarts``) instead of killing the
+drive thread for every tenant; with no checkpoint or budget left the
+campaign lands in ``FAILED``. ``retention_s`` / ``retention_max`` bound
+the terminal-campaign registry: evicted campaigns archive their final
+report to ``report-<id>.json`` first, then release their pipelines,
+binding, and event slices. ``health()`` backs the unauthenticated
+``GET /healthz`` liveness probe.
 """
 
 from __future__ import annotations
@@ -48,16 +63,20 @@ import dataclasses
 import itertools
 import json
 import os
+import tempfile
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core import Coordinator, ProteinPayload
+from repro.checkpoint.io import CheckpointCorruptError
+from repro.core import Coordinator, ProteinPayload, ProtocolCrash
 from repro.data import protein_design_tasks
+from repro.resilience import maybe_corrupt
 from repro.gateway.quotas import QuotaManager, TenantQuota, tenant_band
 from repro.obs import Telemetry, Tracer, write_metrics, write_trace
 from repro.runtime import AsyncExecutor, DeviceAllocator
@@ -71,6 +90,7 @@ class CampaignState(str, Enum):
     PAUSED = "PAUSED"
     COMPLETED = "COMPLETED"
     CANCELED = "CANCELED"
+    FAILED = "FAILED"      # protocol crash with no restart budget left
 
 
 class GatewayError(Exception):
@@ -108,6 +128,12 @@ class _CampaignRecord:
     streams: int = 0                     # structure batches streamed in
     submitted_at: float = field(default_factory=time.time)
     _fingerprint: tuple = ()             # last content seen by report()
+    restarts: int = 0                    # supervisor restarts consumed
+    failure: Optional[str] = None        # last ProtocolCrash cause
+    last_checkpoint: Optional[dict] = None   # newest auto-checkpoint
+    last_checkpoint_t: float = 0.0
+    finished_at: Optional[float] = None  # first seen in a terminal state
+    archived: bool = False               # final report written to disk
 
     def short(self, binding: str) -> str:
         return binding.split("/", 1)[1]
@@ -129,12 +155,22 @@ class GatewayService:
                  payload_length: int = 64, aging_s: float = 60.0,
                  trace_dir: Optional[str] = None,
                  checkpoint_dir: Optional[str] = None,
+                 retry_policy=None, fault_plan=None,
+                 checkpoint_every_s: float = 0.0,
+                 max_restarts: int = 1,
+                 retention_s: Optional[float] = None,
+                 retention_max: Optional[int] = None,
                  now_fn=None):
         import jax
         devs = list(devices if devices is not None else jax.devices())
         self.trace_dir = trace_dir or os.environ.get(
             "IMPRESS_TRACE_DIR") or None
         self.checkpoint_dir = checkpoint_dir
+        self.fault_plan = fault_plan
+        self.checkpoint_every_s = float(checkpoint_every_s)
+        self.max_restarts = int(max_restarts)
+        self.retention_s = retention_s
+        self.retention_max = retention_max
         clock = {"now_fn": now_fn} if now_fn is not None else {}
         self.telemetry = Telemetry(
             tracer=Tracer(enabled=bool(self.trace_dir), **clock), **clock)
@@ -142,6 +178,7 @@ class GatewayService:
         self.executor = AsyncExecutor(
             self.allocator, max_workers=max_workers, aging_s=aging_s,
             telemetry=self.telemetry,
+            retry_policy=retry_policy, fault_plan=fault_plan,
             **({"now_fn": now_fn} if now_fn else {}))
         self.payload = payload if payload is not None else ProteinPayload(
             jax.random.PRNGKey(seed), reduced=reduced,
@@ -151,6 +188,10 @@ class GatewayService:
         self.payload.register_all(self.executor, coalesce=True)
         self.coordinator = Coordinator(self.executor)
         self.coordinator.always_tag_events = True
+        # a protocol handler crash must not kill the drive thread for
+        # every co-tenant: surface it as ProtocolCrash for the supervisor
+        self.coordinator.crash_isolation = True
+        self._started_at = time.time()
         self.quotas = QuotaManager(quotas)
         self.executor.set_allocation_policy(self.quotas)
         self._campaigns: Dict[str, _CampaignRecord] = {}
@@ -174,20 +215,136 @@ class GatewayService:
     def _drive(self):
         while not self._stop.is_set():
             with self._lock:
-                progressed = self.coordinator.step(drain_timeout=0.01)
+                try:
+                    progressed = self.coordinator.step(drain_timeout=0.01)
+                except ProtocolCrash as crash:
+                    self._supervise(crash)
+                    progressed = True
                 self._refresh_states()
+                self._auto_checkpoint()
+                self._gc_campaigns()
             if not progressed:
                 # quiescent: idle-wait off-lock so control ops never queue
                 # behind a sleeping drive thread
                 self._stop.wait(0.02)
 
+    def _supervise(self, crash: ProtocolCrash):
+        """A protocol handler crashed mid-route (lock held). Restart the
+        owning campaign from its last auto-checkpoint when budget and a
+        checkpoint exist; otherwise fail just that campaign. Either way
+        the drive thread — and every co-tenant — keeps running."""
+        cid = crash.binding.split("/", 1)[0]
+        rec = self._campaigns.get(cid)
+        self.telemetry.metrics.counter("gateway.protocol_crashes").inc()
+        print(f"[gateway] {crash}", flush=True)
+        if rec is None:
+            return
+        if rec.restarts >= self.max_restarts or rec.last_checkpoint is None:
+            for b in rec.bindings:
+                self.coordinator.cancel_protocol(b)
+            rec.state = CampaignState.FAILED
+            rec.failure = repr(crash.cause)
+            self._push_band_shares()
+            return
+        rec.restarts += 1
+        rec.failure = repr(crash.cause)
+        self.telemetry.metrics.counter("gateway.campaign_restarts").inc()
+        for b in rec.bindings:
+            # discard the wedged in-memory state; the canceled pipelines
+            # are evicted so their checkpoint restores don't double-count
+            self.coordinator.cancel_protocol(b)
+            self.coordinator.evict_pipelines(b)
+        self._restore_campaign(rec, rec.last_checkpoint)
+        rec.state = CampaignState.RUNNING
+        print(f"[gateway] campaign {cid} restarted from auto-checkpoint "
+              f"({rec.restarts}/{self.max_restarts})", flush=True)
+
+    def _auto_checkpoint(self):
+        """Periodic crash-safety snapshots of RUNNING campaigns (lock
+        held, drive thread). The in-memory copy feeds the supervisor;
+        with a ``checkpoint_dir`` it also lands on disk through the
+        integrity-enveloped writer."""
+        if not self.checkpoint_every_s:
+            return
+        now = time.time()
+        for rec in self._campaigns.values():
+            if rec.state is not CampaignState.RUNNING:
+                continue
+            if now - rec.last_checkpoint_t < self.checkpoint_every_s:
+                continue
+            rec.last_checkpoint = self.checkpoint_campaign(rec.id)
+            rec.last_checkpoint_t = now
+            self.telemetry.metrics.counter("gateway.auto_checkpoints").inc()
+            if self.checkpoint_dir:
+                self._write_campaign_checkpoint(rec)
+
     def _refresh_states(self):
         """Per-campaign completion detection (call with the lock held)."""
+        now = time.time()
         for rec in self._campaigns.values():
             if rec.state is CampaignState.RUNNING and all(
                     self.coordinator.protocol_idle(b)
                     for b in rec.bindings):
                 rec.state = CampaignState.COMPLETED
+            if rec.state in (CampaignState.COMPLETED, CampaignState.CANCELED,
+                             CampaignState.FAILED) \
+                    and rec.finished_at is None:
+                rec.finished_at = now
+
+    # -- retention / GC ----------------------------------------------------
+
+    def _gc_campaigns(self):
+        """Bound the terminal-campaign registry (lock held). Without
+        retention settings nothing is ever evicted — the pre-PR-10
+        behavior."""
+        if self.retention_s is None and self.retention_max is None:
+            return
+        now = time.time()
+        terminal = [r for r in self._campaigns.values()
+                    if r.finished_at is not None]
+        expired = []
+        if self.retention_s is not None:
+            expired += [r for r in terminal
+                        if now - r.finished_at >= self.retention_s]
+        if self.retention_max is not None \
+                and len(terminal) > self.retention_max:
+            overflow = len(terminal) - self.retention_max
+            for r in sorted(terminal, key=lambda r: r.finished_at)[:overflow]:
+                if r not in expired:
+                    expired.append(r)
+        for rec in expired:
+            self._evict(rec)
+
+    def _evict(self, rec: _CampaignRecord) -> bool:
+        """Archive then release one terminal campaign: final report to
+        ``report-<id>.json`` (when a checkpoint_dir exists), pipelines,
+        binding registrations, event slices, and on-disk checkpoint
+        copies all dropped. Refuses while late completions are still
+        inflight — the next GC pass retries."""
+        if not rec.archived:
+            if self.checkpoint_dir:
+                os.makedirs(self.checkpoint_dir, exist_ok=True)
+                path = os.path.join(self.checkpoint_dir,
+                                    f"report-{rec.id}.json")
+                with open(path, "w") as f:
+                    json.dump(self.report(rec.id), f)
+            rec.archived = True
+        removed = [self.coordinator.remove_protocol(b)
+                   for b in rec.bindings]
+        if not all(removed):
+            return False
+        self.coordinator.events = [
+            e for e in self.coordinator.events
+            if not str(e.get("protocol", "")).startswith(rec.id + "/")]
+        if self.checkpoint_dir:
+            for suffix in ("", ".1"):
+                try:
+                    os.remove(self._campaign_path(rec.id) + suffix)
+                except OSError:
+                    pass
+        del self._campaigns[rec.id]
+        self.telemetry.metrics.counter("gateway.campaigns_evicted").inc()
+        return True
 
     # -- tenants ----------------------------------------------------------
 
@@ -483,10 +640,20 @@ class GatewayService:
             events = [e for e in self.coordinator.events
                       if str(e.get("protocol", "")
                              ).startswith(rec.id + "/")]
+            # crash-supervisor evidence rides along only when it exists,
+            # so fault-free campaign reports keep the pre-PR-10 schema
+            extra = {}
+            if rec.restarts:
+                extra["restarts"] = rec.restarts
+            if rec.failure is not None:
+                extra["failure"] = rec.failure
+            res = self.coordinator._resilience_report()
+            if res:
+                extra["resilience"] = res
             return dict(
                 Coordinator._pool_summary(pls),
                 campaign=rec.id, tenant=rec.tenant,
-                state=rec.state.value, version=rec.version,
+                state=rec.state.value, version=rec.version, **extra,
                 cycles=Coordinator._cycle_stats(pls),
                 quality_by_version=Coordinator._quality_by_version(pls),
                 protocols=per_protocol,
@@ -555,6 +722,114 @@ class GatewayService:
                               for p in coord["pipelines"]]
         self.coordinator.load_state_dict(coord)
 
+    # -- durable on-disk campaign checkpoints ------------------------------
+
+    def _campaign_path(self, cid: str) -> str:
+        return os.path.join(self.checkpoint_dir, f"campaign-{cid}.json")
+
+    def _write_campaign_checkpoint(self, rec: _CampaignRecord) -> str:
+        """crc-enveloped atomic write of ``campaign-<id>.json`` with a
+        ``.1`` previous-copy rotation: the last good file survives a
+        corrupted write, and ``load_campaign_checkpoint`` falls back
+        across the pair. The fault plan's corrupt_checkpoint seam runs on
+        the fresh copy — the CI chaos path for exactly that fallback."""
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        path = self._campaign_path(rec.id)
+        body = json.dumps(rec.last_checkpoint, sort_keys=True)
+        envelope = {"crc32": zlib.crc32(body.encode()),
+                    "tenant": rec.tenant, "body": body}
+        if os.path.exists(path):
+            os.replace(path, path + ".1")
+        fd, tmp = tempfile.mkstemp(dir=self.checkpoint_dir)
+        with os.fdopen(fd, "w") as f:
+            json.dump(envelope, f)
+        os.replace(tmp, path)
+        maybe_corrupt(path, self.fault_plan)
+        return path
+
+    @staticmethod
+    def _read_envelope(path: str) -> tuple:
+        """(state, tenant) from one envelope file; raises
+        CheckpointCorruptError on a crc mismatch."""
+        with open(path) as f:
+            env = json.load(f)
+        if isinstance(env, dict) and "crc32" in env and "body" in env:
+            if zlib.crc32(env["body"].encode()) != env["crc32"]:
+                raise CheckpointCorruptError(
+                    f"campaign checkpoint crc mismatch: {path}")
+            return json.loads(env["body"]), env.get("tenant")
+        return env, None   # legacy plain-JSON checkpoint: no evidence
+
+    def load_campaign_checkpoint(self, cid: str) -> tuple:
+        """Verified ``(state, tenant)`` read of ``campaign-<cid>.json``,
+        falling back to the ``.1`` previous copy when the current one is
+        corrupted or unreadable. Raises ``CheckpointCorruptError`` when
+        every copy is bad, returns ``(None, None)`` when none exists."""
+        path = self._campaign_path(cid)
+        last_err = None
+        for p in (path, path + ".1"):
+            if not os.path.exists(p):
+                continue
+            try:
+                return self._read_envelope(p)
+            except (CheckpointCorruptError, ValueError) as e:
+                last_err = e
+                print(f"[gateway] campaign checkpoint {p} failed "
+                      f"verification ({e}); trying previous copy",
+                      flush=True)
+        if last_err is not None:
+            raise CheckpointCorruptError(
+                f"no intact campaign checkpoint for {cid!r}") from last_err
+        return None, None
+
+    def restore_campaigns(self) -> Dict[str, str]:
+        """Restart-recovery sweep: resubmit every ``campaign-*.json`` in
+        ``checkpoint_dir`` under its recorded tenant. Corrupted current
+        copies fall back to ``.1``; wholly-corrupt checkpoints are skipped
+        with a note (one bad tenant must not block the rest). Returns
+        old-id -> new-id for everything restored."""
+        restored: Dict[str, str] = {}
+        if not self.checkpoint_dir or not os.path.isdir(self.checkpoint_dir):
+            return restored
+        for fname in sorted(os.listdir(self.checkpoint_dir)):
+            if not fname.startswith("campaign-") \
+                    or not fname.endswith(".json"):
+                continue
+            old_id = fname[len("campaign-"):-len(".json")]
+            try:
+                state, tenant = self.load_campaign_checkpoint(old_id)
+            except CheckpointCorruptError as e:
+                print(f"[gateway] skipping {fname}: {e}", flush=True)
+                continue
+            if state is None:
+                continue
+            restored[old_id] = self.submit_campaign(
+                state["spec"], tenant=tenant or "default", state=state)
+        return restored
+
+    def health(self) -> dict:
+        """The unauthenticated ``GET /healthz`` body: liveness of the
+        drive thread, campaign census by state, and device headroom —
+        enough for a probe to distinguish 'serving', 'not started', and
+        'drive thread died'."""
+        with self._lock:
+            self._refresh_states()
+            by_state: Dict[str, int] = {}
+            for r in self._campaigns.values():
+                by_state[r.state.value] = by_state.get(r.state.value, 0) + 1
+            alive = self._thread is not None and self._thread.is_alive()
+            status = "ok" if alive else (
+                "stopped" if self._stop.is_set() else "not_started")
+            return {
+                "status": status,
+                "drive_thread_alive": alive,
+                "draining": self._draining,
+                "uptime_s": time.time() - self._started_at,
+                "campaigns": by_state,
+                "devices": {"total": self.allocator.total_devices,
+                            "free": self.allocator.n_free},
+            }
+
     def drain(self):
         """Stop accepting campaigns; existing ones run to completion."""
         with self._lock:
@@ -582,12 +857,10 @@ class GatewayService:
                                  CampaignState.PAUSED):
                     checkpoints[rec.id] = self.checkpoint_campaign(rec.id)
             if self.checkpoint_dir:
-                os.makedirs(self.checkpoint_dir, exist_ok=True)
                 for cid, ck in checkpoints.items():
-                    path = os.path.join(self.checkpoint_dir,
-                                        f"campaign-{cid}.json")
-                    with open(path, "w") as f:
-                        json.dump(ck, f)
+                    rec = self._campaigns[cid]
+                    rec.last_checkpoint = ck
+                    self._write_campaign_checkpoint(rec)
             if self.trace_dir:
                 os.makedirs(self.trace_dir, exist_ok=True)
                 write_trace(self.telemetry.tracer,

@@ -1,0 +1,40 @@
+"""Resilience substrate: deterministic fault injection, a retry taxonomy
+with backoff + circuit breaking, and poison-task quarantine.
+
+Long-lived elastic pilots see failures that one-shot scripts never do:
+lost devices mid-dispatch, flaky payloads, poison rows that kill every
+batch they fuse into, corrupted checkpoints. This package gives the
+runtime one substrate for all of them:
+
+- ``faults``     — seed-driven :class:`FaultPlan` injected at the
+                   executor / allocator / checkpoint seams, so chaos runs
+                   are reproducible in CI.
+- ``policy``     — :class:`RetryPolicy` (transient vs permanent error
+                   classification, exponential backoff with deterministic
+                   jitter, per-kind retry budgets, task deadlines) and a
+                   per-``(kind, stage)`` :class:`CircuitBreaker`, wired
+                   together by :class:`ResilienceManager`.
+- ``deadletter`` — :class:`DeadLetterQueue` quarantine records for tasks
+                   that exhausted their retry budget (the executor
+                   isolates a poison row by re-running fused members
+                   solo first), surfaced in ``report()["resilience"]``.
+"""
+
+from repro.resilience.deadletter import DeadLetterQueue
+from repro.resilience.faults import FaultPlan, FaultSpec, maybe_corrupt
+from repro.resilience.policy import (CircuitBreaker, PermanentError,
+                                     ResilienceManager, RetryPolicy,
+                                     TransientError, classify)
+
+__all__ = [
+    "CircuitBreaker",
+    "DeadLetterQueue",
+    "FaultPlan",
+    "FaultSpec",
+    "PermanentError",
+    "ResilienceManager",
+    "RetryPolicy",
+    "TransientError",
+    "classify",
+    "maybe_corrupt",
+]

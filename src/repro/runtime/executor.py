@@ -8,11 +8,24 @@ run the registered payload function, and emit the finished task. JAX's async
 dispatch means workers overlap host logic with device compute; independent
 sub-meshes execute concurrently.
 
-Fault tolerance: payload exceptions requeue the task up to ``max_retries``;
-``inject_device_failure`` removes a device (elastic shrink) and requeues the
-tasks whose allocation it hit. Straggler mitigation: a watchdog duplicates
-tasks running longer than ``straggler_factor`` × the median duration of
-their kind when spare capacity exists; first finisher wins.
+Fault tolerance (the resilience substrate, ``repro.resilience``): payload
+exceptions are classified by a ``ResilienceManager`` — transient errors
+requeue with an exponential-backoff ``not_before`` stamp the scheduler
+honors (retries never busy-requeue), permanent errors fail fast, a
+per-``(kind, stage)`` circuit breaker sheds retries of a persistently
+failing kind, and tasks that exhaust their budget quarantine to a
+``DeadLetterQueue`` surfaced in ``report()["resilience"]``. A *fused*
+dispatch that fails always re-runs its members solo first (blame cannot be
+attributed to one row) — that bisect step is how a poison row is isolated
+while its batch-mates complete. ``inject_device_failure`` removes a device
+(elastic shrink) and requeues the tasks whose allocation it hit (exactly
+once — speculative duplicates of the victims are canceled). An optional
+``FaultPlan`` injects deterministic chaos (errors / slowdowns / device
+loss) right before each dispatch runs. Straggler mitigation: a watchdog
+duplicates tasks running longer than ``straggler_factor`` × the median
+duration of their kind when spare capacity exists; first finisher wins —
+the same watchdog enforces the policy's task deadline (``deadline_s``),
+failing runaway tasks with class ``deadline``.
 
 Task coalescing: kinds registered via ``register_coalescable`` carry a
 ``CoalesceRule``. When a worker dequeues such a task it also drains every
@@ -58,6 +71,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.pipeline import TERMINAL, Task, TaskState
 from repro.obs import Telemetry
+from repro.resilience.deadletter import DeadLetterQueue
+from repro.resilience.policy import ResilienceManager, RetryPolicy
 from repro.runtime.allocator import DeviceAllocator, SubMesh
 from repro.runtime.scheduler import TaskQueue
 
@@ -104,6 +119,7 @@ class AdmissionPort:
                  dispatch_span: Optional[dict] = None):
         self._ex = executor
         self._rule = rule
+        self._leader = leader
         self._pred = executor._compatible_with(leader, rule)
         self._sub = sub
         self._span = dispatch_span    # fused-batch trace span to link into
@@ -115,12 +131,17 @@ class AdmissionPort:
         """Admit up to ``k`` rows of compatible queued tasks; returns the
         newly admitted tasks (possibly empty)."""
         with self._lock:
+            if self._leader.canceled:
+                # the dispatch is doomed (device loss / cancel): never pull
+                # healthy queued work — or the victims' own failover
+                # clones — onto it
+                return []
             k = min(int(k), self.budget)
             if k <= 0:
                 return []
-            taken = self._ex.queue.pop_matching(self._pred,
-                                                rows=self._rule.rows,
-                                                budget=k)
+            taken = self._ex.queue.pop_matching(
+                lambda t: not self._leader.canceled and self._pred(t),
+                rows=self._rule.rows, budget=k)
             if not taken:
                 return []
             self._ex._track(taken, self._sub)
@@ -145,7 +166,9 @@ class AsyncExecutor:
                  min_straggler_samples: int = 3, aging_s: float = 60.0,
                  band_shares: Optional[Dict[int, float]] = None,
                  now_fn: Optional[Callable[[], float]] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 fault_plan=None):
         self.allocator = allocator
         # one observability bundle (metrics registry + span tracer + clock)
         # per executor: sessions inject a shared instance so allocator
@@ -185,12 +208,26 @@ class AsyncExecutor:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._wake = threading.Event()
+        # retry taxonomy + quarantine + deterministic chaos: without an
+        # injected policy, a legacy-compatible one is derived from
+        # ``max_retries`` (no backoff, breaker disabled) so existing
+        # campaigns keep their exact timing; failed tasks always land in
+        # the dead-letter queue either way
+        if retry_policy is None:
+            retry_policy = RetryPolicy(max_transient_retries=max_retries,
+                                       backoff_base_s=0.0, jitter=0.0,
+                                       breaker_threshold=0)
+        self.resilience = ResilienceManager(retry_policy, now_fn=self.now,
+                                            metrics=self.telemetry.metrics)
+        self.deadletter = DeadLetterQueue()
+        self.fault_plan = fault_plan
+        self._unjoined_workers = 0
         self._workers = [threading.Thread(target=self._worker, daemon=True)
                          for _ in range(max_workers)]
         for w in self._workers:
             w.start()
         self._watchdog = None
-        if straggler_factor:
+        if straggler_factor or retry_policy.deadline_s:
             self._watchdog = threading.Thread(target=self._watch, daemon=True)
             self._watchdog.start()
 
@@ -348,10 +385,19 @@ class AsyncExecutor:
         if rule.admission_window > 0 and budget > 0:
             deadline = self.now() + rule.admission_window
             n_late = 0
+            # task.canceled guard: a device-loss victim must stop admitting
+            # the moment it is canceled, or the still-open window would
+            # pull queued tasks — including the victims' own failover
+            # clones — onto the dead sub-mesh
+            # checking the flag inside the pop predicate too closes the
+            # race with a cancel that lands mid-pop: the victims' clones
+            # only become visible in the queue after the cancel is (both
+            # sides go through the queue lock)
+            wpred = lambda t: not task.canceled and pred(t)  # noqa: E731
             while (budget > 0 and self.now() < deadline
-                   and not self._stop.is_set()):
+                   and not task.canceled and not self._stop.is_set()):
                 time.sleep(min(0.002, rule.admission_window))
-                late = self.queue.pop_matching(pred, rows=rule.rows,
+                late = self.queue.pop_matching(wpred, rows=rule.rows,
                                                budget=budget)
                 self._track(late, sub)
                 members += late
@@ -470,6 +516,10 @@ class AsyncExecutor:
                 for m in members:
                     m.set_state(TaskState.RUNNING, now)
                 tel.tracer.mark_all(members, "dispatched")
+                if self.fault_plan is not None:
+                    # deterministic chaos seam: may sleep (slowdown), kill
+                    # a device, or raise a classified payload error
+                    self.fault_plan.on_dispatch(task, members, self)
                 result = fn(sub, payload)
                 if port is not None and port.admitted:
                     # live-admitted rows follow the initial members' rows
@@ -479,7 +529,23 @@ class AsyncExecutor:
                            if len(members) > 1 else [result])
                 now = self.now()
                 for m, r in zip(members, results):
-                    if m.canceled:
+                    if getattr(m, "_deadline_exceeded", False):
+                        # the watchdog flagged this run as over its
+                        # deadline: fail it (class "deadline") so the
+                        # owning pipeline degrades instead of wedging on
+                        # a CANCELED completion
+                        m.error = (f"DeadlineExceeded: ran past the "
+                                   f"policy deadline "
+                                   f"({self.resilience.policy.deadline_s}s)")
+                        m.set_state(TaskState.FAILED, now)
+                        tel.tracer.mark(m, "failed")
+                        tel.metrics.counter("tasks.failed",
+                                            kind=m.kind).inc()
+                        tel.metrics.counter(
+                            "tasks.failed", **{"class": "deadline"}).inc()
+                        self.deadletter.record(m, error_class="deadline",
+                                               error=m.error, now=now)
+                    elif m.canceled:
                         m.set_state(TaskState.CANCELED, now)
                         tel.tracer.mark(m, "canceled")
                         tel.metrics.counter("tasks.canceled",
@@ -488,6 +554,7 @@ class AsyncExecutor:
                         m.result = r
                         m.set_state(TaskState.DONE, now)
                         tel.tracer.mark(m, "completed")
+                        self.resilience.on_success(m)
                         self._observe_done(m)
                         d = m.duration()
                         if d is not None:
@@ -503,18 +570,37 @@ class AsyncExecutor:
                         and port.admitted[-1] is not members[-1]:
                     members = members + port.admitted  # retry them too
                 err = f"{type(e).__name__}: {e}\n" + traceback.format_exc()
+                error_class = self.resilience.classify(e)
+                fused = len(members) > 1
                 retried: List[Task] = []
                 now = self.now()
                 for m in members:
                     m.error = err
-                    if m.retries < self.max_retries and not m.canceled:
+                    action, detail = self.resilience.decide(
+                        m, error_class, fused=fused)
+                    if action == "retry":
+                        # detail = backoff seconds; the scheduler honors
+                        # not_before so the retry waits out its backoff in
+                        # the queue instead of busy-requeueing
                         m.retries += 1
+                        m.not_before = now + detail
                         retried.append(m)
                     else:
+                        # detail = failure class: permanent / exhausted /
+                        # budget / shed / canceled
                         m.set_state(TaskState.FAILED, now)
                         tel.tracer.mark(m, "failed")
                         tel.metrics.counter("tasks.failed",
                                             kind=m.kind).inc()
+                        tel.metrics.counter("tasks.failed",
+                                            **{"class": detail}).inc()
+                        if detail != "canceled":
+                            # quarantine: the dead-letter record is the
+                            # report()["resilience"] evidence trail
+                            self.deadletter.record(m, error_class=detail,
+                                                   error=err, fused=fused,
+                                                   now=now)
+                            tel.tracer.mark(m, "quarantined")
                         finished.append(m)
                 tel.tracer.dispatch_end(
                     span, "failed",
@@ -527,7 +613,7 @@ class AsyncExecutor:
                 if self._policy is not None:
                     self._policy.released(task, sub)
                 now = self.now()
-                for m in retried:  # retry members independently (re-fusable)
+                for m in retried:  # retry members independently (solo)
                     tel.tracer.mark(m, "retried")
                     tel.metrics.counter("tasks.retried", kind=m.kind).inc()
                     m.set_state(TaskState.QUEUED, now)
@@ -622,6 +708,23 @@ class AsyncExecutor:
             now = self.now()
             with self._lock:
                 running = list(self._running.values())
+            deadline = self.resilience.policy.deadline_s
+            if deadline:
+                # task deadlines (RetryPolicy.deadline_s): a run past its
+                # deadline is cooperatively canceled and later surfaces as
+                # FAILED with class "deadline" (see the worker done path) —
+                # a hung payload degrades its pipeline instead of wedging
+                # the campaign
+                for task, sub, t0 in running:
+                    if (now - t0) > deadline and not task.canceled \
+                            and not task.preemptible:
+                        task._deadline_exceeded = True
+                        task.canceled = True  # cooperative stop signal
+                        self.telemetry.tracer.mark(task, "deadline")
+                        self.telemetry.metrics.counter(
+                            "tasks.deadline_exceeded", kind=task.kind).inc()
+            if not self.straggler_factor:
+                continue
             for task, sub, t0 in running:
                 hist = self._durations.get(task.kind, [])
                 if len(hist) < self.min_straggler_samples:
@@ -657,31 +760,85 @@ class AsyncExecutor:
             return len(self.queue) + len(self._running)
 
     def inject_device_failure(self, device) -> List[Task]:
-        """Simulate a node failure: shrink the pool, requeue affected tasks."""
+        """Simulate a node failure: shrink the pool, requeue affected
+        tasks. Each victim is requeued exactly once (a second failure
+        hitting an already-canceled run clones nothing), speculative
+        duplicates are never cloned (their original still runs), and live
+        speculative duplicates *of* a victim are canceled — the victim's
+        clone is its only replacement, so pipelines never double-advance."""
         hit = self.allocator.mark_failed(device)
         requeued = []
         with self._lock:
             running = list(self._running.values())
+        tel = self.telemetry
         for task, sub, _ in running:
-            if any(sub.uid == h.uid for h in hit):
-                task.canceled = True  # cooperative cancel of doomed run
-                clone = Task(kind=task.kind, payload=task.payload,
-                             resources=task.resources, priority=task.priority,
-                             pipeline_id=task.pipeline_id,
-                             preemptible=task.preemptible,
-                             stage=task.stage, band=task.band,
-                             tenant=task.tenant)
-                clone.retries = task.retries
-                self.submit(clone)
-                requeued.append(clone)
+            if not any(sub.uid == h.uid for h in hit):
+                continue
+            if task.canceled:
+                continue  # already canceled (or already failed over once)
+            task.canceled = True  # cooperative cancel of doomed run
+            tel.tracer.mark(task, "device_lost")
+            tel.metrics.counter("tasks.device_lost", kind=task.kind).inc()
+            if task.speculative_of is not None:
+                # a duplicate died with the device: the original is still
+                # running elsewhere — no replacement needed
+                continue
+            # cancel this victim's speculative duplicates (queued or
+            # running): the clone below is the single replacement
+            with self._lock:
+                dups = [t.uid for t, _, _ in self._running.values()
+                        if t.speculative_of == task.uid]
+            dups += [t.uid for t in self.queue.snapshot()
+                     if t.speculative_of == task.uid]
+            for uid in dups:
+                self.cancel(uid)
+            clone = Task(kind=task.kind, payload=task.payload,
+                         resources=task.resources, priority=task.priority,
+                         pipeline_id=task.pipeline_id,
+                         preemptible=task.preemptible,
+                         stage=task.stage, band=task.band,
+                         tenant=task.tenant)
+            clone.retries = task.retries
+            self.submit(clone)
+            requeued.append(clone)
         return requeued
 
+    def resilience_summary(self) -> dict:
+        """The ``report()["resilience"]`` section: retry/budget/breaker
+        accounting from the ``ResilienceManager``, dead-letter quarantine
+        records, and — when a ``FaultPlan`` is installed — the injected
+        faults that actually fired."""
+        out = self.resilience.summary()
+        dl = self.deadletter.records()
+        if dl:
+            out["deadletter"] = dl
+        if self.deadletter.dropped:
+            out["deadletter_dropped"] = self.deadletter.dropped
+        if self.fault_plan is not None:
+            out["faults_injected"] = self.fault_plan.summary()
+        return out
+
     def shutdown(self, wait: bool = True):
+        """Stop workers. Workers still blocked on device compute after the
+        2 s join timeout are counted (``stats()["unjoined_workers"]``) and
+        logged instead of silently leaked — a leaked thread holds its
+        sub-mesh, so the leak must be visible to the operator."""
         self._stop.set()
         self._wake.set()
         if wait:
+            unjoined = 0
             for w in self._workers:
                 w.join(timeout=2.0)
+                if w.is_alive():
+                    unjoined += 1
+            self._unjoined_workers = unjoined
+            if unjoined:
+                self.telemetry.metrics.counter(
+                    "executor.unjoined_workers").inc(unjoined)
+                print(f"[executor] shutdown: {unjoined} worker(s) still "
+                      f"blocked on device compute after join timeout "
+                      f"(threads leaked, sub-meshes still held)",
+                      flush=True)
 
     # -- metrics -----------------------------------------------------------
 
@@ -753,7 +910,7 @@ class AsyncExecutor:
         done = [t for t in self._tasks.values() if t.state == TaskState.DONE]
         setup = [t.setup_time() for t in done if t.setup_time()]
         run = [t.duration() for t in done if t.duration()]
-        return {
+        out = {
             "coalesce": self.coalesce_stats(),
             "n_tasks": len(self._tasks),
             "n_done": len(done),
@@ -765,6 +922,11 @@ class AsyncExecutor:
             "mean_exec_setup_s": sum(setup) / len(setup) if setup else 0.0,
             "mean_running_s": sum(run) / len(run) if run else 0.0,
         }
+        if self._unjoined_workers:
+            # only after a shutdown that leaked threads — the legacy key
+            # set stays byte-identical otherwise (golden schema tests)
+            out["unjoined_workers"] = self._unjoined_workers
+        return out
 
     def telemetry_summary(self) -> dict:
         """The new observability section for ``report()["telemetry"]``:

@@ -126,6 +126,11 @@ class TaskQueue:
         work waits; without backfill, stop at the first non-fitting task."""
         for i in indices:
             task = self._items[i]
+            if task.not_before > now:
+                # retry backoff: not eligible yet — skip without blocking
+                # the tasks behind it (a timing hold is not a resource wait,
+                # so it never stops backfill either)
+                continue
             if task.preemptible and design_waiting \
                     and not self._aged(task, now):
                 continue
@@ -194,12 +199,13 @@ class TaskQueue:
         fused device batch."""
         taken: List[Task] = []
         with self._lock:
+            now = self.now()
             i = 0
             while i < len(self._items):
                 if limit is not None and len(taken) >= limit:
                     break
                 t = self._items[i]
-                if pred(t):
+                if t.not_before <= now and pred(t):
                     r = rows(t) if rows is not None else 1
                     if budget is None or r <= budget:
                         taken.append(self._items.pop(i))
@@ -218,8 +224,10 @@ class TaskQueue:
         so a row-proportional sub-mesh is sized for the rows the dispatch is
         about to coalesce, not just the task that was popped."""
         with self._lock:
+            now = self.now()
             return sum((rows(t) if rows is not None else 1)
-                       for t in self._items if pred(t))
+                       for t in self._items
+                       if t.not_before <= now and pred(t))
 
     def remove(self, uid: int) -> Optional[Task]:
         with self._lock:

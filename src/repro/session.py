@@ -123,6 +123,12 @@ class CampaignSpec:
     max_workers: int = 4
     max_retries: int = 1
     straggler_factor: Optional[float] = None
+    # retry taxonomy overrides (repro.resilience.RetryPolicy kwargs, e.g.
+    # {"backoff_base_s": 0.05, "breaker_threshold": 3, "deadline_s": 30}):
+    # None keeps the legacy-compatible default derived from max_retries
+    # (no backoff, breaker disabled). JSON-serializable, so gateway specs
+    # and checkpoints carry it
+    resilience: Optional[dict] = None
     coalesce: bool = True                  # register the coalesce rules
     reduced: bool = True                   # reduced-scale payload models
     seed: int = 0
@@ -320,9 +326,12 @@ class ImpressSession:
     tests that share a compiled-payload cache or fake the device grid.
     """
 
-    def __init__(self, spec: CampaignSpec, *, payload=None, devices=None):
+    def __init__(self, spec: CampaignSpec, *, payload=None, devices=None,
+                 fault_plan=None):
         import jax
         self.spec = spec
+        self.fault_plan = fault_plan   # repro.resilience.FaultPlan (chaos
+        #   tests / benches); also consulted by checkpoint-writing callers
         self.protocol_specs = _normalize_protocols(spec)
         # validate the spec before paying for threads or payload compiles
         unknown = [ps.kind for ps in self.protocol_specs
@@ -342,11 +351,19 @@ class ImpressSession:
         self.telemetry = Telemetry(
             tracer=Tracer(enabled=bool(self.trace_dir)))
         self.allocator = DeviceAllocator(devs, telemetry=self.telemetry)
+        retry_policy = None
+        if spec.resilience is not None:
+            from repro.resilience import RetryPolicy
+            policy_kwargs = dict(spec.resilience)
+            policy_kwargs.setdefault("max_transient_retries",
+                                     spec.max_retries)
+            retry_policy = RetryPolicy(**policy_kwargs)
         self.executor = AsyncExecutor(
             self.allocator, max_workers=spec.max_workers,
             max_retries=spec.max_retries,
             straggler_factor=spec.straggler_factor,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry,
+            retry_policy=retry_policy, fault_plan=fault_plan)
         self._shutdown = False
         try:
             self._build(spec, payload, jax)

@@ -1,0 +1,31 @@
+"""End-to-end chaos smoke, run exactly as CI runs it.
+
+``tools/check_resilience.py`` spawns control and faulted campaigns in
+separate subprocesses (pipeline uids seed the sampling streams, so
+bit-identical comparison needs fresh uid counters per run) and asserts
+the accepted designs match the fault-free control minus the quarantined
+pipeline. This wrapper just invokes it and surfaces its output on
+failure; the per-mechanism coverage lives in ``tests/test_resilience.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_chaos_smoke_matches_control():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "tools", "check_resilience.py"),
+         "--min-goodput-ratio", "0.3"],
+        env=env, cwd=_ROOT, capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, (
+        f"chaos smoke failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "OK: chaos smoke passed" in proc.stdout

@@ -40,6 +40,7 @@ ARCH_SECTIONS = [
     "Heterogeneous stages & fair scheduling",
     "Telemetry & tracing",
     "Campaign gateway",
+    "Resilience & fault injection",
     "Adding a new task kind",
 ]
 
@@ -47,7 +48,8 @@ ARCH_SECTIONS = [
 # the DesignProtocol interface are the public surface of the repo
 API_MODULES = ["session.py", "core/api.py", "core/stages.py",
                "gateway/service.py", "gateway/quotas.py",
-               "gateway/server.py"]
+               "gateway/server.py", "resilience/policy.py",
+               "resilience/faults.py", "resilience/deadletter.py"]
 
 
 def repro_packages():

@@ -1,0 +1,268 @@
+#!/usr/bin/env python
+"""CI chaos smoke: one three-protocol campaign under a deterministic fault
+schedule vs. its fault-free control.
+
+The injected schedule covers every failure class the resilience layer
+handles: one device loss mid-campaign, two transient payload faults (which
+must retry with backoff and still converge), one sticky poison task (which
+must quarantine to the dead-letter queue while the rest of the campaign
+completes), and one corrupted checkpoint (which must fall back to the
+previous intact copy on restore).
+
+Checks (exits non-zero on any failure):
+
+* the faulted campaign completes, and every non-quarantined pipeline's
+  accepted-design history is bit-identical to the fault-free control's;
+* the quarantined pipeline's history is a prefix of its control history
+  (it stopped early, it did not diverge);
+* ``report()["resilience"]`` carries the evidence: retry counts, the
+  dead-letter record naming the poisoned pipeline, and the fired-fault
+  summary matching the schedule;
+* a checkpoint corrupted by the fault plan fails verification and restore
+  falls back to the previous step;
+* goodput (accepted designs / wall-clock) stays above
+  ``--min-goodput-ratio`` of the control's (the bench measures the real
+  ratio; CI only guards against collapse).
+
+Control and faulted campaigns run in *separate subprocesses*: pipeline
+uids come from a process-global counter and seed each pipeline's sampling
+stream, so bit-identical comparison needs both runs to allocate uids from
+a fresh counter. Each child forces 4 XLA host platform devices (device
+loss needs more than one device) before jax loads.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_resilience.py [--trace-dir DIR]
+"""
+
+from __future__ import annotations
+
+import os
+
+# must happen before anything imports jax (children re-exec this module,
+# so they inherit + re-apply the same forcing)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import tempfile      # noqa: E402
+import time          # noqa: E402
+
+import numpy as np   # noqa: E402
+
+
+def _spec(trace_dir=None, timeout=300.0, max_retries=None):
+    from repro.session import CampaignSpec, ProtocolSpec
+    resilience = {"max_transient_retries": 3, "backoff_base_s": 0.02,
+                  "backoff_cap_s": 0.25, "jitter": 0.25,
+                  "breaker_threshold": 0}   # breaker off: determinism
+    if max_retries is not None:
+        # the bench's no-retry baseline: fail fast on the same schedule
+        resilience["max_transient_retries"] = int(max_retries)
+    return CampaignSpec(
+        structures=2, receptor_len=12, peptide_len=4,
+        protocols=(
+            ProtocolSpec("cont-v", n_cycles=2, n_candidates=3),
+            ProtocolSpec("multi-objective", n_cycles=2, n_candidates=3),
+            ProtocolSpec("binder", n_cycles=1, n_candidates=2,
+                         score_batch=2),
+        ),
+        resilience=resilience,
+        max_workers=4, timeout=timeout, seed=0, trace_dir=trace_dir)
+
+
+def _chaos_plan():
+    from repro.resilience import FaultPlan, FaultSpec
+    return FaultPlan([
+        # two transient payload faults: must retry (with backoff) to DONE
+        FaultSpec(op="error", kind="predict", at=2, count=1),
+        FaultSpec(op="error", kind="generate", at=3, count=1),
+        # one device lost mid-campaign: victims fail over to clones
+        FaultSpec(op="device_loss", at=4, device_index=3),
+        # one sticky poison row: quarantines while the campaign completes
+        FaultSpec(op="poison", kind="predict", at=5),
+    ], seed=0)
+
+
+def _run_child(faulted: bool, out_path: str, trace_dir, timeout: float,
+               max_retries=None):
+    """Child-process body: run one campaign, dump evidence JSON."""
+    import jax
+    if len(jax.devices()) < 4:
+        raise SystemExit(f"need 4 forced host devices, "
+                         f"got {len(jax.devices())}")
+    from repro.session import ImpressSession
+    plan = _chaos_plan() if faulted else None
+    t0 = time.monotonic()
+    with ImpressSession(_spec(trace_dir, timeout, max_retries),
+                        fault_plan=plan) as s:
+        report = s.run()
+        histories = {pl.name: [dict(h) for h in pl.history]
+                     for pl in s.coordinator.pipelines.values()}
+    with open(out_path, "w") as f:
+        json.dump({"histories": histories,
+                   "resilience": report["resilience"],
+                   "elapsed_s": time.monotonic() - t0}, f)
+
+
+def _spawn(faulted: bool, trace_dir, timeout: float) -> dict:
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        out = tf.name
+    cmd = [sys.executable, os.path.abspath(__file__), "--role",
+           "chaos" if faulted else "control", "--out", out,
+           "--timeout", str(timeout)]
+    if faulted and trace_dir:
+        cmd += ["--trace-dir", trace_dir]
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, env=env, timeout=timeout + 120)
+    if proc.returncode != 0:
+        raise SystemExit(f"{'chaos' if faulted else 'control'} child "
+                         f"failed with rc={proc.returncode}")
+    with open(out) as f:
+        data = json.load(f)
+    os.unlink(out)
+    return data
+
+
+def _accepted(histories, exclude=()):
+    return sum(len(h) for name, h in histories.items()
+               if name not in exclude)
+
+
+def _checkpoint_leg():
+    """Corrupt-checkpoint fault: verify-on-restore must reject the newest
+    copy and fall back to the previous step."""
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import FaultPlan, FaultSpec
+
+    tmp = tempfile.mkdtemp(prefix="impress-chaos-ckpt-")
+    mgr = CheckpointManager(tmp, keep=3, async_write=False)
+    good = {"w": jnp.arange(64, dtype=jnp.float32)}
+    mgr.save(1, good, extra={"step": 1}, block=True)
+    mgr.save(2, {"w": jnp.arange(64, dtype=jnp.float32) * 2},
+             extra={"step": 2}, block=True)
+    plan = FaultPlan([FaultSpec(op="corrupt_checkpoint", at=1)], seed=1)
+    if not plan.on_checkpoint_saved(mgr._base(2) + ".npz"):
+        return {"ok": False, "why": "fault plan failed to corrupt"}
+    state, extra, step = mgr.restore({"w": jnp.zeros(64, jnp.float32)})
+    intact = bool(np.array_equal(np.asarray(state["w"]),
+                                 np.asarray(good["w"])))
+    return {"ok": step == 1 and intact and extra == {"step": 1},
+            "fallback_step": step, "intact": intact}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=("compare", "control", "chaos"),
+                    default="compare")
+    ap.add_argument("--out", default=None, help="(child) evidence JSON")
+    ap.add_argument("--trace-dir", default=None,
+                    help="where the faulted run writes its trace (default: "
+                         "$IMPRESS_TRACE_DIR, else none)")
+    ap.add_argument("--timeout", type=float, default=300.0)
+    ap.add_argument("--min-goodput-ratio", type=float, default=0.5,
+                    help="CI floor on faulted/control goodput (the bench "
+                         "measures the real ratio)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="(child) override max_transient_retries — the "
+                         "bench's no-retry baseline passes 0")
+    args = ap.parse_args(argv)
+    trace_dir = args.trace_dir or os.environ.get("IMPRESS_TRACE_DIR") or None
+
+    if args.role in ("control", "chaos"):
+        _run_child(args.role == "chaos", args.out, trace_dir, args.timeout,
+                   args.max_retries)
+        return 0
+
+    control = _spawn(False, None, args.timeout)
+    chaos = _spawn(True, trace_dir, args.timeout)
+    control_hist, chaos_hist = control["histories"], chaos["histories"]
+
+    failures = []
+    res = chaos["resilience"]
+
+    # -- dead-letter evidence: exactly the poison row quarantined ----------
+    dead = res.get("deadletter", [])
+    poison = [r for r in dead if r["class"] == "permanent"
+              and "poison" in (r["error"] or "")]
+    if len(poison) != 1:
+        failures.append(f"expected exactly 1 poison quarantine record, "
+                        f"got {len(poison)} (deadletter: {dead})")
+    quarantined = poison[0].get("pipeline") if poison else None
+    if poison and not quarantined:
+        failures.append(f"dead-letter record lacks the resolved pipeline "
+                        f"name: {poison[0]}")
+
+    # -- retry evidence ----------------------------------------------------
+    if res.get("retries", 0) < 2:
+        failures.append(f"expected >=2 retries (two transient faults), "
+                        f"got {res.get('retries')}")
+    fired = res.get("faults_injected", {}).get("fired_by_op", {})
+    if fired.get("error") != 2:
+        failures.append(f"expected 2 injected errors to fire, got {fired}")
+    if fired.get("device_loss") != 1:
+        failures.append(f"expected 1 device loss to fire, got {fired}")
+    if fired.get("poison", 0) < 1:
+        failures.append(f"expected the poison row to fire, got {fired}")
+
+    # -- accepted designs identical minus the quarantined pipeline ---------
+    if set(chaos_hist) != set(control_hist):
+        failures.append(f"pipeline sets differ: "
+                        f"{sorted(set(chaos_hist) ^ set(control_hist))}")
+    for name in sorted(set(control_hist) & set(chaos_hist)):
+        ctl, cha = control_hist[name], chaos_hist[name]
+        if name == quarantined:
+            if cha != ctl[:len(cha)]:
+                failures.append(f"quarantined pipeline {name}: history is "
+                                f"not a prefix of its control history")
+            continue
+        if cha != ctl:
+            failures.append(f"pipeline {name}: history diverged under "
+                            f"faults ({len(cha)} vs {len(ctl)} entries)")
+
+    # -- goodput -----------------------------------------------------------
+    exclude = {quarantined} if quarantined else set()
+    ctl_s, cha_s = control["elapsed_s"], chaos["elapsed_s"]
+    ctl_good = _accepted(control_hist, exclude) / max(ctl_s, 1e-9)
+    cha_good = _accepted(chaos_hist, exclude) / max(cha_s, 1e-9)
+    ratio = cha_good / max(ctl_good, 1e-9)
+    if ratio < args.min_goodput_ratio:
+        failures.append(f"goodput collapsed under faults: ratio "
+                        f"{ratio:.2f} < {args.min_goodput_ratio}")
+
+    # -- corrupted checkpoint falls back ----------------------------------
+    ckpt = _checkpoint_leg()
+    if not ckpt.get("ok"):
+        failures.append(f"checkpoint corruption leg failed: {ckpt}")
+
+    summary = {
+        "control_s": round(ctl_s, 2),
+        "chaos_s": round(cha_s, 2),
+        "goodput_ratio": round(ratio, 3),
+        "quarantined": quarantined,
+        "retries": res.get("retries"),
+        "faults_fired": fired,
+        "checkpoint_fallback": ckpt,
+        "trace_dir": trace_dir,
+    }
+    print(json.dumps(summary, indent=2))
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures))
+        return 1
+    print("OK: chaos smoke passed (accepted designs identical to the "
+          "fault-free control minus the quarantined pipeline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
